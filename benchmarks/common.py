@@ -1,0 +1,88 @@
+"""Shared fixtures for the paper-figure benchmarks.
+
+Scales are CPU-laptop sized (the container has no TPU): the *shapes* of the
+paper's curves are what we reproduce; EXPERIMENTS.md records the mapping to
+the paper's cluster-scale numbers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.meta_index import PyramidIndex, build_pyramid_index
+from repro.data.synthetic import (clustered_vectors, norm_spread_vectors,
+                                  query_set)
+
+# benchmark scale (override with --quick for CI-speed runs)
+N_ITEMS = 20_000
+N_DIM = 32
+N_CLUSTERS = 64
+N_QUERIES = 200
+NUM_SHARDS = 8
+META_SIZE = 256
+TOPK = 10
+
+
+@dataclasses.dataclass
+class Workload:
+    x: np.ndarray
+    queries: np.ndarray
+    true_ids: np.ndarray
+    metric: str
+
+
+_CACHE: Dict = {}
+
+
+def euclidean_workload(n=N_ITEMS, d=N_DIM, q=N_QUERIES) -> Workload:
+    key = ("euclid", n, d, q)
+    if key not in _CACHE:
+        x = clustered_vectors(n, d, N_CLUSTERS, seed=0)
+        queries = query_set(x, q, seed=1)
+        true_ids, _ = M.brute_force_topk(queries, x, TOPK, "l2")
+        _CACHE[key] = Workload(x, queries, true_ids, "l2")
+    return _CACHE[key]
+
+
+def mips_workload(n=N_ITEMS, d=N_DIM, q=N_QUERIES) -> Workload:
+    key = ("mips", n, d, q)
+    if key not in _CACHE:
+        x = norm_spread_vectors(n, d, N_CLUSTERS, seed=2)
+        queries = np.random.default_rng(3).normal(
+            size=(q, d)).astype(np.float32)
+        true_ids, _ = M.brute_force_topk(queries, x, TOPK, "ip")
+        _CACHE[key] = Workload(x, queries, true_ids, "ip")
+    return _CACHE[key]
+
+
+def build_index(w: Workload, *, num_shards=NUM_SHARDS, meta_size=META_SIZE,
+                branching_factor=2, replication_r=0,
+                seed=0) -> PyramidIndex:
+    key = ("idx", id(w.x), num_shards, meta_size, replication_r, seed)
+    if key not in _CACHE:
+        cfg = PyramidConfig(
+            metric=w.metric, num_shards=num_shards, meta_size=meta_size,
+            sample_size=min(len(w.x), 8_000),
+            branching_factor=branching_factor,
+            max_degree=16, max_degree_upper=8, ef_construction=60,
+            ef_search=80, replication_r=replication_r, kmeans_iters=8,
+            seed=seed)
+        _CACHE[key] = build_pyramid_index(w.x, cfg)
+    return _CACHE[key]
+
+
+def precision(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
+    hits = sum(len(set(f.tolist()) & set(t.tolist()))
+               for f, t in zip(found_ids, true_ids))
+    return hits / true_ids.size
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    """CSV line per harness contract: name,us_per_call,derived."""
+    print(f"{name},{us_per_call:.1f},{derived}")

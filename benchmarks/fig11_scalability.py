@@ -1,0 +1,75 @@
+"""Paper Fig. 11: throughput scaling with the number of machines (w shards).
+
+On this single-CPU container the w shards cannot actually run in parallel,
+so we time each shard's workload separately and report the *simulated
+cluster wall-clock* = max over shards (machines run concurrently; the
+coordinator merge is negligible). Expectation: more shards -> higher
+throughput at matched precision, with sub-linear scaling (HNSW search is
+O(log n) in shard size — the paper's explanation for its 1.6-1.8x at 2x).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import hnsw as H
+from repro.core.router import route_queries
+
+
+def _simulated_parallel_qps(idx, queries, k, branching_factor):
+    metric = idx.config.metric
+    mask, _ = route_queries(
+        idx.meta_arrays(), jnp.asarray(idx.part_of_center),
+        jnp.asarray(queries), metric=metric,
+        branching_factor=branching_factor, num_shards=idx.num_shards)
+    mask = np.asarray(mask)
+    shard_times = []
+    all_ids = np.full((len(queries), idx.num_shards, k), -1, np.int64)
+    for s in range(idx.num_shards):
+        sel = np.where(mask[:, s])[0]
+        if sel.size == 0:
+            shard_times.append(0.0)
+            continue
+        arrs = idx.sub_arrays(s)
+        kk = min(k, idx.subs[s].n)
+        # warm this shard's jit, then time
+        H.hnsw_search(arrs, jnp.asarray(queries[sel]), metric=metric,
+                      k=kk, ef=idx.config.ef_search)[0].block_until_ready()
+        t0 = time.perf_counter()
+        ids, _ = H.hnsw_search(arrs, jnp.asarray(queries[sel]),
+                               metric=metric, k=kk, ef=idx.config.ef_search)
+        ids.block_until_ready()
+        shard_times.append(time.perf_counter() - t0)
+        all_ids[sel, s, :kk] = np.asarray(ids)
+    wall = max(shard_times)
+    return len(queries) / wall, all_ids.reshape(len(queries), -1)
+
+
+def run(quick: bool = False):
+    w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
+    rows = []
+    for shards in ((4, 8) if not quick else (2, 4)):
+        idx = C.build_index(w, num_shards=shards)
+        qps, flat_ids = _simulated_parallel_qps(idx, w.queries, C.TOPK, 2)
+        # precision from the union of returned ids
+        hits = sum(
+            len(set(flat_ids[i][flat_ids[i] >= 0].tolist()) &
+                set(w.true_ids[i].tolist()))
+            for i in range(len(w.queries)))
+        p = hits / w.true_ids.size
+        rows.append((shards, qps, p))
+        C.emit(f"fig11/shards{shards}", 1e6 / qps,
+               f"sim_parallel_qps={qps:.0f};precision={p:.3f}")
+    scale = rows[-1][1] / rows[0][1]
+    C.emit("fig11/scaling_factor", 0.0,
+           f"speedup={scale:.2f}x_for_{rows[-1][0]//rows[0][0]}x_shards")
+    if not quick:
+        assert scale > 1.2, f"should scale with shards: {rows}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

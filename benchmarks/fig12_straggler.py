@@ -1,0 +1,37 @@
+"""Paper Fig. 12: throughput under a straggler at varying CPU share.
+Expectation: with 2x replication, throughput holds until the straggler is
+extremely slow (paper: stable above ~30% CPU share)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.serving.engine import ServingEngine
+
+
+def run(quick: bool = False):
+    w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
+    idx = C.build_index(w)
+    shares = (1.0, 0.5, 0.1) if not quick else (1.0, 0.1)
+    nq = 64 if quick else 128
+    rows = []
+    for share in shares:
+        eng = ServingEngine(idx, replicas=2)
+        try:
+            eng.set_cpu_share("exec-s0-r0", share)
+            t0 = time.perf_counter()
+            qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=2)
+            res = eng.collect(len(qids), timeout=180)
+            dt = time.perf_counter() - t0
+            qps = len(res) / dt
+            rows.append((share, qps, len(res)))
+            C.emit(f"fig12/straggler_share{share}", dt / max(len(res), 1)
+                   * 1e6, f"qps={qps:.0f};completed={len(res)}/{len(qids)}")
+        finally:
+            eng.shutdown()
+    assert rows[0][2] == nq
+    return rows
+
+
+if __name__ == "__main__":
+    run()

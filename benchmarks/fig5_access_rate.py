@@ -1,0 +1,42 @@
+"""Paper Fig. 5: sub-HNSW access rate vs branching factor K, for two
+meta-HNSW sizes. Expectation: rate grows with K, shrinks with meta size."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core.router import access_rate, route_queries
+
+
+def run(quick: bool = False):
+    w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
+    meta_sizes = (64, 256) if not quick else (32, 64)
+    ks = (1, 2, 4, 8) if not quick else (1, 4)
+    rows = []
+    for m in meta_sizes:
+        idx = C.build_index(w, meta_size=m)
+        meta = idx.meta_arrays()
+        parts = jnp.asarray(idx.part_of_center)
+        for k in ks:
+            t0 = time.perf_counter()
+            mask, _ = route_queries(
+                meta, parts, jnp.asarray(w.queries), metric="l2",
+                branching_factor=k, num_shards=idx.num_shards)
+            rate = access_rate(mask)
+            dt = (time.perf_counter() - t0) / len(w.queries)
+            rows.append((m, k, rate))
+            C.emit(f"fig5/access_rate/meta{m}/K{k}", dt * 1e6,
+                   f"access_rate={rate:.3f}")
+    # invariants from the paper
+    by_m = {m: [r for mm, k, r in rows if mm == m] for m in meta_sizes}
+    for m, rates in by_m.items():
+        assert all(np.diff(rates) >= -1e-9), \
+            f"access rate must grow with K (meta {m}): {rates}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

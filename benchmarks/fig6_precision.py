@@ -1,0 +1,35 @@
+"""Paper Fig. 6: precision vs branching factor K (two meta sizes).
+Expectation: precision rises quickly with K then saturates; smaller meta
+size gives higher precision at equal K (more shards touched)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.distributed import search_single_host
+
+
+def run(quick: bool = False):
+    w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
+    meta_sizes = (64, 256) if not quick else (32,)
+    ks = (1, 2, 4, 8) if not quick else (1, 4)
+    rows = []
+    for m in meta_sizes:
+        idx = C.build_index(w, meta_size=m)
+        for k in ks:
+            t0 = time.perf_counter()
+            ids, _, mask = search_single_host(
+                idx, w.queries, k=C.TOPK, branching_factor=k)
+            dt = (time.perf_counter() - t0) / len(w.queries)
+            p = C.precision(ids, w.true_ids)
+            rows.append((m, k, p, mask.mean()))
+            C.emit(f"fig6/precision/meta{m}/K{k}", dt * 1e6,
+                   f"precision={p:.3f};access={mask.mean():.3f}")
+    for m in meta_sizes:
+        ps = [p for mm, k, p, _ in rows if mm == m]
+        assert ps[-1] >= ps[0] - 0.02, f"precision should rise with K: {ps}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Fig. 7: query throughput vs branching factor K.
+Expectation: throughput drops as K grows (more shards touched per query)."""
+from __future__ import annotations
+
+import time
+
+from benchmarks import common as C
+from repro.core.distributed import search_single_host
+
+
+def run(quick: bool = False):
+    w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
+    idx = C.build_index(w)
+    ks = (1, 2, 4, 8) if not quick else (1, 4)
+    rows = []
+    # warm the jit caches
+    search_single_host(idx, w.queries[:8], k=C.TOPK, branching_factor=1)
+    for k in ks:
+        t0 = time.perf_counter()
+        ids, _, mask = search_single_host(
+            idx, w.queries, k=C.TOPK, branching_factor=k)
+        dt = time.perf_counter() - t0
+        qps = len(w.queries) / dt
+        rows.append((k, qps))
+        C.emit(f"fig7/throughput/K{k}", dt / len(w.queries) * 1e6,
+               f"qps={qps:.0f};precision={C.precision(ids, w.true_ids):.3f}")
+    if not quick:  # at tiny quick-mode scale fixed overheads dominate
+        assert rows[0][1] > rows[-1][1], \
+            f"throughput should drop with K: {rows}"
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig. 8: 90th-percentile query latency vs branching factor K,
+measured through the full coordinator/executor engine (queueing included).
+Expectation: p90 latency grows with K (more partials to await)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.serving.engine import ServingEngine
+
+
+def run(quick: bool = False):
+    w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
+    idx = C.build_index(w)
+    ks = (1, 2, 4) if not quick else (1, 4)
+    rows = []
+    nq = 64 if quick else 128
+    for k in ks:
+        eng = ServingEngine(idx, replicas=1)
+        try:
+            qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=k)
+            res = eng.collect(len(qids), timeout=120)
+            lat = np.asarray([r.latency_s for r in res])
+            p90 = float(np.percentile(lat, 90)) if len(lat) else float("nan")
+            rows.append((k, p90))
+            C.emit(f"fig8/latency_p90/K{k}", p90 * 1e6,
+                   f"p50={np.percentile(lat, 50)*1e3:.1f}ms;"
+                   f"completed={len(res)}/{len(qids)}")
+        finally:
+            eng.shutdown()
+    return rows
+
+
+if __name__ == "__main__":
+    run()

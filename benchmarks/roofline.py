@@ -1,0 +1,55 @@
+"""Roofline table from the dry-run artifacts (deliverable (g)).
+
+Reads artifacts/dryrun/*.json (produced by repro.launch.dryrun) and prints
+per (arch x shape x mesh): the three roofline terms, the dominant one,
+MODEL_FLOPS/HLO_FLOPS, and bytes/chip. Used to build EXPERIMENTS.md
+§Roofline and to pick the three hillclimb pairs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from benchmarks import common as C
+
+ART = os.environ.get("DRYRUN_ART", "artifacts/dryrun")
+
+
+def load(mesh: str = "pod") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(ART, f"*__{mesh}.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def run(quick: bool = False):
+    recs = load("pod")
+    if not recs:
+        C.emit("roofline/missing", 0.0,
+               "no artifacts; run python -m repro.launch.dryrun first")
+        return []
+    rows = []
+    for r in recs:
+        name = f"roofline/{r['arch']}/{r['shape']}"
+        if r.get("skipped"):
+            C.emit(name, 0.0, "skipped=" + r["skipped"][:40].replace(",", ";"))
+            continue
+        rf = r["roofline"]
+        total = rf["compute_s"] + rf["memory_s"] + rf["collective_s"]
+        frac = rf[rf["dominant"]] / total if total else 0.0
+        C.emit(
+            name, total * 1e6,
+            f"dominant={rf['dominant']};compute_s={rf['compute_s']:.2e};"
+            f"memory_s={rf['memory_s']:.2e};"
+            f"collective_s={rf['collective_s']:.2e};"
+            f"useful_ratio={r['useful_compute_ratio']:.2f};"
+            f"peak_GiB={r['memory'].get('peak_bytes', 0)/2**30:.1f}")
+        rows.append((r["arch"], r["shape"], rf["dominant"], frac))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""MIPS (maximum inner-product search) with Alg. 5: spherical k-means
+partitioning + norm replication, on Tiny-like norm-spread data.
+
+PYTHONPATH=src python examples/mips_search.py
+"""
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import norm_spread_vectors
+
+
+def main() -> None:
+    x = norm_spread_vectors(n=8_000, d=24, num_dirs=48, seed=0)
+    q = np.random.default_rng(1).normal(size=(64, 24)).astype(np.float32)
+    true_ids, _ = M.brute_force_topk(q, x, 10, "ip")
+
+    for r in (0, 100):
+        cfg = PyramidConfig(metric="ip", num_shards=8, meta_size=128,
+                            sample_size=4_000, branching_factor=1,
+                            replication_r=r, max_degree=16,
+                            max_degree_upper=8, ef_construction=60,
+                            ef_search=80)
+        idx = build_pyramid_index(x, cfg)
+        ids, _, mask = search_single_host(idx, q, k=10)
+        hits = sum(len(set(a.tolist()) & set(b.tolist()))
+                   for a, b in zip(ids, true_ids))
+        overhead = idx.build_stats["total_stored"] / len(x) - 1
+        print(f"r={r:4d}: precision@10={hits/true_ids.size:.3f}  "
+              f"access_rate={mask.mean():.3f}  "
+              f"storage_overhead={overhead:+.1%}")
+    print("norm replication (Alg. 5 lines 12-15) pulls large-norm items "
+          "into every direction cone that needs them")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: build a Pyramid index and run distributed similarity search.
+
+PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors, query_set
+
+
+def main() -> None:
+    # A Deep/SIFT-like clustered dataset (paper Table I, laptop scale)
+    x = clustered_vectors(n=10_000, d=32, num_clusters=48, seed=0)
+    queries = query_set(x, 50, seed=1)
+
+    cfg = PyramidConfig(
+        metric="l2",          # also: "ip" (MIPS, Alg. 5) or "angular"
+        num_shards=8,         # w sub-HNSWs (one per worker in the paper)
+        meta_size=256,        # m: meta-HNSW vertices (kmeans centers)
+        sample_size=5_000,    # n': kmeans sample
+        branching_factor=2,   # K: shards touched per query
+    )
+    print("building Pyramid index (meta-HNSW + partitions + sub-HNSWs)...")
+    index = build_pyramid_index(x, cfg, verbose=True)
+
+    ids, scores, mask = search_single_host(index, queries, k=10)
+    true_ids, _ = M.brute_force_topk(queries, x, 10, "l2")
+    hits = sum(len(set(a.tolist()) & set(b.tolist()))
+               for a, b in zip(ids, true_ids))
+    print(f"precision@10 = {hits / true_ids.size:.3f}")
+    print(f"access rate  = {mask.mean():.3f} "
+          f"(fraction of sub-HNSWs touched per query)")
+    print(f"top-3 neighbours of query 0: ids={ids[0, :3]} "
+          f"scores={scores[0, :3]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Common substrate: configs, registry, sharding helpers."""
+from repro.common.config import (
+    ArchConfig,
+    AttentionKind,
+    BlockKind,
+    InputShape,
+    MoEConfig,
+    PyramidConfig,
+    SSMConfig,
+    INPUT_SHAPES,
+)
+from repro.common.registry import get_arch, list_archs, register_arch
+
+__all__ = [
+    "ArchConfig",
+    "AttentionKind",
+    "BlockKind",
+    "InputShape",
+    "MoEConfig",
+    "PyramidConfig",
+    "SSMConfig",
+    "INPUT_SHAPES",
+    "get_arch",
+    "list_archs",
+    "register_arch",
+]

@@ -1,0 +1,42 @@
+"""Architecture registry.
+
+``src/repro/configs/<arch>.py`` modules register themselves at import; the
+registry lazily imports the configs package on first lookup so that
+``get_arch("qwen3-1.7b")`` works from anywhere.
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.common.config import ArchConfig
+
+_REGISTRY: Dict[str, ArchConfig] = {}
+_LOADED = False
+
+
+def register_arch(cfg: ArchConfig) -> ArchConfig:
+    if cfg.name in _REGISTRY:
+        raise ValueError(f"duplicate arch registration: {cfg.name}")
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def _ensure_loaded() -> None:
+    global _LOADED
+    if not _LOADED:
+        importlib.import_module("repro.configs")
+        _LOADED = True
+
+
+def get_arch(name: str) -> ArchConfig:
+    _ensure_loaded()
+    if name not in _REGISTRY:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_archs() -> List[str]:
+    _ensure_loaded()
+    return sorted(_REGISTRY)

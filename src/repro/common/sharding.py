@@ -1,0 +1,111 @@
+"""Sharding helpers shared by train/serve/dry-run.
+
+Axis conventions (see DESIGN.md §6):
+  data  — batch / FSDP axis (16 per pod)
+  model — tensor / expert / shard axis (16)
+  pod   — optional leading data-parallel axis across pods (2)
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DATA_AXIS = "data"
+MODEL_AXIS = "model"
+POD_AXIS = "pod"
+
+
+def batch_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Mesh axes the global batch is sharded over (pod+data when multi-pod)."""
+    if POD_AXIS in mesh.axis_names:
+        return (POD_AXIS, DATA_AXIS)
+    return (DATA_AXIS,)
+
+
+def fsdp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes parameters are FSDP-sharded over (same as batch axes)."""
+    return batch_axes(mesh)
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+def data_sharding(mesh: Mesh, rank: int) -> NamedSharding:
+    """Shard leading (batch) dim over the batch axes, replicate the rest."""
+    spec = [batch_axes(mesh)] + [None] * (rank - 1)
+    return ns(mesh, *spec)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return ns(mesh)
+
+
+def logical_to_sharding(mesh: Mesh, logical: Sequence[Optional[str]]) -> NamedSharding:
+    """Map logical axis names to mesh axes.
+
+    Logical names:
+      'batch'   -> (pod, data)
+      'fsdp'    -> (pod, data)   (parameter shard dim)
+      'model'   -> model         (tensor-parallel dim)
+      'expert'  -> model         (expert-parallel dim)
+      'shard'   -> model         (Pyramid sub-HNSW dim)
+      None      -> replicated dim
+    """
+    out = []
+    for name in logical:
+        if name is None:
+            out.append(None)
+        elif name in ("batch", "fsdp"):
+            ax = batch_axes(mesh)
+            out.append(ax if len(ax) > 1 else ax[0])
+        elif name in ("model", "expert", "shard"):
+            out.append(MODEL_AXIS)
+        else:
+            raise ValueError(f"unknown logical axis {name!r}")
+    return ns(mesh, *out)
+
+
+def logical_to_sharding_shaped(mesh: Mesh, logical: Sequence[Optional[str]],
+                               shape: Sequence[int]) -> NamedSharding:
+    """Like ``logical_to_sharding`` but shape-aware:
+
+    * drops the sharding of any dim whose size does not divide its mesh
+      axes (pjit rejects uneven shardings; e.g. vocab 50280 over 16);
+    * resolves the special 'moe_ff' logical axis: model axis iff the
+      'expert' dim was dropped (expert count < model axis, e.g. grok 8e),
+      so tensor parallelism moves from the expert dim to d_ff.
+    """
+    expert_dropped = False
+    fixed = []
+    moe_ff_dims = []
+    for i, (dim, name) in enumerate(
+            zip(shape, list(logical) + [None] * (len(shape) - len(logical)))):
+        if name == "moe_ff":
+            moe_ff_dims.append(i)
+            fixed.append(None)
+            continue
+        if name is None:
+            fixed.append(None)
+            continue
+        single = logical_to_sharding(mesh, (name,)).spec[0]
+        axes = single if isinstance(single, tuple) else (single,)
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if dim % n == 0:
+            fixed.append(single)
+        else:
+            fixed.append(None)
+            if name == "expert":
+                expert_dropped = True
+    for i in moe_ff_dims:
+        if expert_dropped and shape[i] % mesh.shape[MODEL_AXIS] == 0:
+            fixed[i] = MODEL_AXIS
+    return ns(mesh, *fixed)
+
+
+def count_devices(mesh: Mesh) -> int:
+    return mesh.devices.size

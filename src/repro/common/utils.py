@@ -1,0 +1,46 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def tree_param_count(tree) -> int:
+    return sum(x.size for x in jax.tree.leaves(tree))
+
+
+def assert_no_nans(tree, where: str = "") -> None:
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        arr = np.asarray(leaf)
+        if np.issubdtype(arr.dtype, np.floating) and not np.all(np.isfinite(arr)):
+            raise AssertionError(f"non-finite values at {where}{jax.tree_util.keystr(path)}")
+
+
+@contextmanager
+def timed(label: str, sink=None) -> Iterator[None]:
+    t0 = time.perf_counter()
+    yield
+    dt = time.perf_counter() - t0
+    msg = f"[timed] {label}: {dt*1e3:.2f} ms"
+    (sink or print)(msg)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-12) -> jnp.ndarray:
+    return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)

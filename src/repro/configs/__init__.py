@@ -1,0 +1,14 @@
+"""Assigned architecture configs. Importing this package registers all
+architectures with the registry (``repro.common.registry``)."""
+from repro.configs import (  # noqa: F401
+    chatglm3_6b,
+    gemma3_12b,
+    grok_1_314b,
+    h2o_danube_1_8b,
+    internvl2_2b,
+    mamba2_780m,
+    musicgen_medium,
+    phi35_moe_42b,
+    qwen3_1_7b,
+    zamba2_7b,
+)

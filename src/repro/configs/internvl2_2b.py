@@ -1,0 +1,23 @@
+"""internvl2-2b — VLM: InternViT frontend (STUB) + InternLM2-1.8b decoder.
+
+[arXiv:2404.16821] 24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92553.
+Per the assignment, the vision encoder + projector are a stub:
+``input_specs`` provides precomputed patch embeddings [B, S, frontend_dim];
+the model applies a learned projection and runs the language decoder.
+"""
+from repro.common.config import ArchConfig
+from repro.common.registry import register_arch
+
+CONFIG = register_arch(ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92553,
+    frontend="vision",
+    frontend_dim=1024,   # InternViT-300M patch embedding width
+    source="[arXiv:2404.16821]",
+))

@@ -1,0 +1,177 @@
+"""The paper's public API (Sec. IV-A, Listings 1-3).
+
+Thin, faithful wrappers over the engine/index internals so user code reads
+exactly like the paper:
+
+    gc = GraphConstructor(data_path, name, metric)
+    gc.build_graphs(para)
+
+    coord = Coordinator(brokers, graph_path, name, metric)
+    res = coord.execute(query, para)                 # sync
+    coord.execute_async(query, para, callback)       # async + callback
+
+    ex = Executor(brokers, graph_path_and_id, name, metric)
+    ex.start(para)
+
+"brokers" is the in-process engine (our Kafka stand-in, DESIGN.md §3);
+graph paths point at ``launch.build_index`` artifacts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.core.meta_index import PyramidIndex, build_pyramid_index
+from repro.launch.build_index import load_index, save_index
+from repro.serving.engine import QueryResult, ServingEngine
+
+
+@dataclasses.dataclass
+class QueryPara:
+    """Query-processing parameters (the paper's ``para``)."""
+    k: int = 10
+    branching_factor: Optional[int] = None   # K
+    timeout_s: float = 60.0
+
+
+@dataclasses.dataclass
+class BuildPara:
+    """Index-construction parameters (the paper's ``para``)."""
+    meta_size: int = 1_000          # m
+    num_shards: int = 16            # w
+    sample_size: int = 20_000       # n'
+    replication_r: int = 0          # r (MIPS, Alg. 5)
+    max_degree: int = 32
+    ef_construction: int = 100
+
+
+class Brokers:
+    """Stand-in for the Kafka broker list: owns one ServingEngine per
+    dataset name. Executors/coordinators attach to it."""
+
+    def __init__(self):
+        self._engines = {}
+        self._lock = threading.Lock()
+
+    def engine_for(self, name: str, index: PyramidIndex, *,
+                   replicas: int = 1) -> ServingEngine:
+        with self._lock:
+            if name not in self._engines:
+                self._engines[name] = ServingEngine(index,
+                                                    replicas=replicas)
+            return self._engines[name]
+
+    def shutdown(self):
+        with self._lock:
+            for e in self._engines.values():
+                e.shutdown()
+            self._engines.clear()
+
+
+class Coordinator:
+    """Listing 1. Receives queries, routes via the meta-HNSW, merges."""
+
+    def __init__(self, brokers: Brokers, graph_path: str, name: str,
+                 metric: str, replicas: int = 1):
+        self.index = load_index(graph_path)
+        assert (self.index.config.metric == metric or
+                (metric == "ip" and self.index.config.is_mips)), \
+            f"index metric {self.index.config.metric} != {metric}"
+        self.name = name
+        self.engine = brokers.engine_for(name, self.index,
+                                         replicas=replicas)
+
+    def execute(self, query: np.ndarray, para: QueryPara) -> QueryResult:
+        """Synchronous top-k search for ONE query vector."""
+        res = self.execute_batch(query[None, :], para)
+        return res[0]
+
+    def execute_batch(self, queries: np.ndarray,
+                      para: QueryPara) -> List[QueryResult]:
+        qids = self.engine.submit(queries, k=para.k,
+                                  branching_factor=para.branching_factor)
+        got = self.engine.collect(len(qids), timeout=para.timeout_s)
+        by_id = {r.query_id: r for r in got}
+        return [by_id[q] for q in qids if q in by_id]
+
+    def execute_async(self, query: np.ndarray, para: QueryPara,
+                      callback: Callable[[QueryResult], None]) -> None:
+        """Returns immediately; ``callback`` fires with the final result."""
+
+        def run():
+            callback(self.execute(query, para))
+
+        threading.Thread(target=run, daemon=True).start()
+
+
+class Executor:
+    """Listing 2. In the paper a standalone process serving one sub-HNSW;
+    here executors live inside the engine — ``start`` scales the replica
+    group for this dataset (elastic scalability, Sec. IV-B)."""
+
+    def __init__(self, brokers: Brokers, graph_path: str, name: str,
+                 metric: str, shard_id: Optional[int] = None):
+        self.index = load_index(graph_path)
+        self.name = name
+        self.brokers = brokers
+        self.shard_id = shard_id
+        self._started = []
+
+    def start(self, para: Optional[QueryPara] = None) -> None:
+        engine = self.brokers.engine_for(self.name, self.index)
+        shards = ([self.shard_id] if self.shard_id is not None
+                  else range(engine.w))
+        for s in shards:
+            replica = sum(1 for n in engine.executors if f"-s{s}-" in n)
+            engine._spawn(s, replica)
+            self._started.append((s, replica))
+
+    def stop(self) -> None:
+        engine = self.brokers.engine_for(self.name, self.index)
+        for s, r in self._started:
+            name = f"exec-s{s}-r{r}"
+            if name in engine.executors:
+                engine.kill_executor(name)
+        self._started.clear()
+
+
+class GraphConstructor:
+    """Listing 3. Builds (and refreshes) the meta-HNSW + sub-HNSWs."""
+
+    def __init__(self, data: np.ndarray, metric: str, out_path: str):
+        self.data = data
+        self.metric = metric
+        self.out_path = out_path
+        self._index: Optional[PyramidIndex] = None
+
+    def build_graphs(self, para: BuildPara) -> PyramidIndex:
+        cfg = PyramidConfig(
+            metric=self.metric, num_shards=para.num_shards,
+            meta_size=para.meta_size,
+            sample_size=min(para.sample_size, len(self.data)),
+            max_degree=para.max_degree,
+            max_degree_upper=max(para.max_degree // 2, 4),
+            ef_construction=para.ef_construction,
+            replication_r=para.replication_r)
+        self._index = build_pyramid_index(self.data, cfg)
+        save_index(self._index, self.out_path)
+        return self._index
+
+    def refresh(self, new_data: np.ndarray, para: BuildPara,
+                brokers: Optional[Brokers] = None,
+                name: Optional[str] = None) -> PyramidIndex:
+        """Re-read the dataset, rebuild, notify coordinators/executors
+        (the paper's ``refresh()``): the engine for ``name`` is torn down
+        and lazily rebuilt on next use with the fresh index."""
+        self.data = new_data
+        index = self.build_graphs(para)
+        if brokers is not None and name is not None:
+            with brokers._lock:
+                eng = brokers._engines.pop(name, None)
+            if eng is not None:
+                eng.shutdown()
+        return index

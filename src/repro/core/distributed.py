@@ -1,0 +1,300 @@
+"""Distributed query processing (Alg. 4) as an SPMD JAX program.
+
+The paper's Kafka topic-per-sub-HNSW dispatch becomes capacity-bounded
+dispatch over the ``model`` mesh axis (DESIGN.md §3):
+
+  * the w sub-HNSWs are stacked into equal-padded arrays and sharded over
+    ``model`` (each device owns w / |model| shards);
+  * every device routes the (replicated) query batch through the replicated
+    meta-HNSW, picks the <= C queries assigned to *its* shards
+    (``jnp.nonzero(..., size=C)`` = static-shape queue draining), searches
+    its local sub-HNSWs, and
+  * partial results are combined with an ``all_gather`` + scatter + top-k —
+    the coordinator merge of Alg. 4 line 9.
+
+Per-shard work drops from B queries (HNSW-naive) to C ≈ B·K/w — the paper's
+throughput mechanism, realised as a FLOP reduction instead of queue load.
+
+``search_single_host`` is the pure-numpy/JAX reference used by tests and
+CPU benchmarks; the SPMD path is validated against it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.common.config import PyramidConfig
+from repro.core import hnsw as H
+from repro.core import metrics as M
+from repro.core.meta_index import PyramidIndex
+from repro.core.router import route_queries
+
+
+# ---------------------------------------------------------------------------
+# Stacked shard arrays (equal-padded, shardable over the model axis)
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class StackedShards:
+    """All w sub-HNSWs stacked on a leading shard axis.
+
+    Padding: graphs are padded to the max sub-dataset size with isolated
+    nodes (all -1 neighbours, id -1, zero vector) which can never be reached
+    by the walk nor returned (ids filtered downstream).
+    """
+
+    data: jnp.ndarray     # [w, n_pad, d]
+    ids: jnp.ndarray      # [w, n_pad] (-1 pad)
+    bottom: jnp.ndarray   # [w, n_pad, M0]
+    upper: jnp.ndarray    # [w, L, n_pad, Mu]
+    entry: jnp.ndarray    # [w]
+    num_upper_levels: jnp.ndarray  # [w]
+
+    def tree_flatten(self):
+        return (self.data, self.ids, self.bottom, self.upper, self.entry,
+                self.num_upper_levels), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_shards(self) -> int:
+        return self.data.shape[0]
+
+    def shard(self, i: int) -> H.HNSWArrays:
+        return H.HNSWArrays(
+            data=self.data[i], ids=self.ids[i], bottom=self.bottom[i],
+            upper=self.upper[i], entry=self.entry[i],
+            num_upper_levels=self.num_upper_levels[i])
+
+
+def stack_shards(index: PyramidIndex) -> StackedShards:
+    arrs = [g.device_arrays() for g in index.subs]
+    n_pad = max(a.data.shape[0] for a in arrs)
+    l_pad = max(a.upper.shape[0] for a in arrs)
+    mu = max(a.upper.shape[2] for a in arrs)
+    m0 = max(a.bottom.shape[1] for a in arrs)
+    d = arrs[0].data.shape[1]
+    w = len(arrs)
+
+    data = np.zeros((w, n_pad, d), np.float32)
+    ids = np.full((w, n_pad), -1, np.int32)
+    bottom = np.full((w, n_pad, m0), -1, np.int32)
+    upper = np.full((w, l_pad, n_pad, mu), -1, np.int32)
+    entry = np.zeros((w,), np.int32)
+    nul = np.zeros((w,), np.int32)
+    for i, a in enumerate(arrs):
+        n = a.data.shape[0]
+        data[i, :n] = np.asarray(a.data)
+        ids[i, :n] = np.asarray(a.ids)
+        bottom[i, :n, : a.bottom.shape[1]] = np.asarray(a.bottom)
+        up = np.asarray(a.upper)
+        upper[i, : up.shape[0], :n, : up.shape[2]] = up
+        entry[i] = int(a.entry)
+        nul[i] = int(a.num_upper_levels)
+    return StackedShards(
+        data=jnp.asarray(data), ids=jnp.asarray(ids),
+        bottom=jnp.asarray(bottom), upper=jnp.asarray(upper),
+        entry=jnp.asarray(entry), num_upper_levels=jnp.asarray(nul))
+
+
+# ---------------------------------------------------------------------------
+# Reference path (single host, python loop over shards)
+# ---------------------------------------------------------------------------
+
+
+def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
+                       ef: Optional[int] = None,
+                       branching_factor: Optional[int] = None,
+                       naive: bool = False):
+    """Alg. 4 reference implementation.
+
+    naive=True searches every shard (the HNSW-naive baseline of Sec. III).
+    Returns (ids [B, k], scores [B, k], mask [B, w]).
+    """
+    cfg = index.config
+    ef = ef or cfg.ef_search
+    kb = branching_factor or cfg.branching_factor
+    metric = "ip" if cfg.is_mips else cfg.metric
+    q = M.preprocess_queries(queries, cfg.metric)
+    b = q.shape[0]
+    w = index.num_shards
+
+    if naive:
+        mask = np.ones((b, w), dtype=bool)
+    else:
+        mask_j, _ = route_queries(
+            index.meta_arrays(), jnp.asarray(index.part_of_center),
+            jnp.asarray(q), metric=metric, branching_factor=kb,
+            num_shards=w, ef=max(64, kb))
+        mask = np.asarray(mask_j)
+
+    all_scores = np.full((b, w, k), -np.inf, np.float32)
+    all_ids = np.full((b, w, k), -1, np.int64)
+    for s in range(w):
+        sel = np.where(mask[:, s])[0]
+        if sel.size == 0:
+            continue
+        arrs = index.sub_arrays(s)
+        kk = min(k, index.subs[s].n)
+        # pad the per-shard batch to the next power of two so repeated
+        # calls with varying routing fan-out reuse the jit cache
+        padded = 1 << (int(sel.size) - 1).bit_length()
+        qs = q[sel]
+        if padded > sel.size:
+            qs = np.concatenate(
+                [qs, np.repeat(qs[:1], padded - sel.size, axis=0)])
+        ids, scores = H.hnsw_search(
+            arrs, jnp.asarray(qs), metric=metric, k=kk, ef=ef)
+        all_ids[sel, s, :kk] = np.asarray(ids)[: sel.size]
+        all_scores[sel, s, :kk] = np.asarray(scores)[: sel.size]
+
+    flat_scores = all_scores.reshape(b, -1)
+    flat_ids = all_ids.reshape(b, -1)
+    # dedupe replicated ids (MIPS replication may return one item twice)
+    order = np.argsort(-flat_scores, axis=1)
+    out_ids = np.full((b, k), -1, np.int64)
+    out_scores = np.full((b, k), -np.inf, np.float32)
+    for i in range(b):
+        seen = set()
+        j = 0
+        for idx in order[i]:
+            v = int(flat_ids[i, idx])
+            if v < 0 or v in seen:
+                continue
+            seen.add(v)
+            out_ids[i, j] = v
+            out_scores[i, j] = flat_scores[i, idx]
+            j += 1
+            if j == k:
+                break
+    return out_ids, out_scores, mask
+
+
+# ---------------------------------------------------------------------------
+# SPMD path (shard_map over the model axis)
+# ---------------------------------------------------------------------------
+
+
+def _local_search(g: H.HNSWArrays, q: jnp.ndarray, metric: str, k: int,
+                  ef: int, max_iters: int):
+    """hnsw_search without the jit wrapper (already inside shard_map)."""
+
+    def one(qv):
+        entry = H._greedy_descend(g, qv, metric, max_steps=64)
+        scores, nodes = H._beam_search_bottom(g, qv, entry, metric, ef,
+                                              max_iters)
+        top_scores, idx = jax.lax.top_k(scores, k)
+        nds = nodes[idx]
+        ext = jnp.where(nds >= 0, g.ids[jnp.clip(nds, 0)], -1)
+        return ext, top_scores
+
+    return jax.vmap(one)(q)
+
+
+def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
+                           batch: int, ef: Optional[int] = None,
+                           max_iters: int = 400, naive: bool = False,
+                           model_axis: str = "model",
+                           data_axis: Optional[str] = None):
+    """Builds the jitted SPMD search step for a given mesh.
+
+    The returned fn has signature
+      fn(stacked: StackedShards, meta: HNSWArrays, part_of_center [m],
+         queries [B, d]) -> (ids [B, k], scores [B, k])
+    with ``stacked`` sharded over ``model`` on its leading (shard) axis and
+    meta replicated. Capacity C = ceil(B * K / w * capacity_factor)
+    (C = B for the naive baseline).
+
+    When ``data_axis`` is given, the query batch is sharded over it (each
+    data slice is an independent replica group serving its slice — the
+    paper's replication axis) and ``batch`` must be the PER-REPLICA batch.
+    """
+    metric = "ip" if cfg.is_mips else cfg.metric
+    ef = ef or cfg.ef_search
+    w = cfg.num_shards
+    n_model = mesh.shape[model_axis]
+    assert w % n_model == 0, (w, n_model)
+    w_local = w // n_model
+    if naive:
+        capacity = batch
+    else:
+        capacity = int(np.ceil(
+            batch * cfg.branching_factor / w * cfg.capacity_factor))
+        capacity = max(1, min(batch, capacity))
+
+    def spmd(stacked: StackedShards, meta: H.HNSWArrays,
+             part_of_center: jnp.ndarray, queries: jnp.ndarray):
+        my = jax.lax.axis_index(model_axis)
+
+        if naive:
+            mask = jnp.ones((queries.shape[0], w), dtype=jnp.bool_)
+        else:
+            mask, _ = route_queries.__wrapped__(
+                meta, part_of_center, queries, metric=metric,
+                branching_factor=cfg.branching_factor, num_shards=w,
+                ef=max(64, cfg.branching_factor))
+
+        b = queries.shape[0]
+
+        def one_shard(shard_slot: int):
+            g = stacked.shard(shard_slot)
+            global_shard = my * w_local + shard_slot
+            q_mask = mask[:, global_shard]                       # [B]
+            # static-size queue drain: indices of assigned queries; overflow
+            # and empty slots point at the dummy row b (sliced off below).
+            qidx = jnp.nonzero(q_mask, size=capacity, fill_value=b)[0]
+            slot_valid = qidx < b
+            qs = queries[jnp.clip(qidx, 0, b - 1)]               # [C, d]
+            ids, scores = _local_search(g, qs, metric, k,
+                                        max(ef, k), max_iters)
+            ids = jnp.where(slot_valid[:, None], ids, -1)
+            scores = jnp.where(slot_valid[:, None], scores, -jnp.inf)
+            return qidx, ids, scores
+
+        per = [one_shard(s) for s in range(w_local)]
+        qidx = jnp.stack([p[0] for p in per])       # [w_local, C]
+        ids = jnp.stack([p[1] for p in per])        # [w_local, C, k]
+        scores = jnp.stack([p[2] for p in per])     # [w_local, C, k]
+
+        # coordinator merge: gather partials from all shards
+        qidx = jax.lax.all_gather(qidx, model_axis, tiled=True)    # [w, C]
+        ids = jax.lax.all_gather(ids, model_axis, tiled=True)      # [w, C, k]
+        scores = jax.lax.all_gather(scores, model_axis, tiled=True)
+
+        # dummy row b absorbs invalid slots; sliced off before the merge
+        out_scores = jnp.full((b + 1, w * k), -jnp.inf, jnp.float32)
+        out_ids = jnp.full((b + 1, w * k), -1, jnp.int32)
+        for s in range(w):
+            col = slice(s * k, (s + 1) * k)
+            out_scores = out_scores.at[qidx[s], col].set(scores[s])
+            out_ids = out_ids.at[qidx[s], col].set(ids[s])
+        top_scores, sel = jax.lax.top_k(out_scores[:b], k)
+        top_ids = jnp.take_along_axis(out_ids[:b], sel, axis=1)
+        return top_ids, top_scores
+
+    qspec = P(data_axis) if data_axis else P()
+    fn = shard_map(
+        spmd, mesh=mesh,
+        in_specs=(
+            StackedShards(
+                data=P(model_axis), ids=P(model_axis),
+                bottom=P(model_axis), upper=P(model_axis),
+                entry=P(model_axis), num_upper_levels=P(model_axis)),
+            H.HNSWArrays(P(), P(), P(), P(), P(), P()),  # replicated meta
+            P(),
+            qspec,
+        ),
+        out_specs=(qspec, qspec),
+        check_vma=False)
+    return jax.jit(fn)

@@ -1,0 +1,79 @@
+"""Similarity functions.
+
+The paper frames everything as *similarity* s(q, x) where larger is more
+similar (Sec. II): Euclidean NNS uses s = -||q-x||^2 (monotone to -||q-x||),
+MIPS uses s = q.x, angular uses cosine (items/queries normalised up front,
+after which it coincides with inner product — Sec. III-C).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+METRICS = ("l2", "ip", "angular")
+
+
+def similarity_matrix(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
+    """Pairwise similarity, q:[B,d] x:[n,d] -> [B,n]. Larger = more similar."""
+    if metric == "l2":
+        # -||q-x||^2 = 2 q.x - ||q||^2 - ||x||^2 ; matmul-shaped for the MXU.
+        qn = jnp.sum(q * q, axis=-1, keepdims=True)
+        xn = jnp.sum(x * x, axis=-1)
+        return 2.0 * q @ x.T - qn - xn[None, :]
+    if metric == "ip":
+        return q @ x.T
+    if metric == "angular":
+        qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+        xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+        return qn @ xn.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def similarity_matrix_np(q: np.ndarray, x: np.ndarray, metric: str) -> np.ndarray:
+    """Numpy twin of ``similarity_matrix`` for offline index building."""
+    q = np.asarray(q, dtype=np.float32)
+    x = np.asarray(x, dtype=np.float32)
+    if metric == "l2":
+        qn = np.sum(q * q, axis=-1, keepdims=True)
+        xn = np.sum(x * x, axis=-1)
+        return 2.0 * q @ x.T - qn - xn[None, :]
+    if metric == "ip":
+        return q @ x.T
+    if metric == "angular":
+        qn = q / (np.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+        xn = x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+        return qn @ xn.T
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def brute_force_topk(q: np.ndarray, x: np.ndarray, k: int, metric: str):
+    """Exact ground truth: (ids [B,k], scores [B,k]) by descending similarity."""
+    sims = similarity_matrix_np(q, x, metric)
+    k = min(k, x.shape[0])
+    part = np.argpartition(-sims, k - 1, axis=1)[:, :k]
+    part_scores = np.take_along_axis(sims, part, axis=1)
+    order = np.argsort(-part_scores, axis=1)
+    ids = np.take_along_axis(part, order, axis=1)
+    scores = np.take_along_axis(part_scores, order, axis=1)
+    return ids, scores
+
+
+def preprocess_dataset(x: np.ndarray, metric: str) -> np.ndarray:
+    """Dataset-side normalisation (angular -> unit norm, Sec. III-C)."""
+    if metric == "angular":
+        return x / (np.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+    return np.asarray(x, dtype=np.float32)
+
+
+def preprocess_queries(q: np.ndarray, metric: str) -> np.ndarray:
+    if metric == "angular":
+        return q / (np.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+    return np.asarray(q, dtype=np.float32)
+
+
+def get_metric_fn(metric: str) -> Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray]:
+    if metric not in METRICS:
+        raise ValueError(f"unknown metric {metric!r}")
+    return lambda q, x: similarity_matrix(q, x, metric)

@@ -1,0 +1,40 @@
+"""Query -> sub-HNSW routing (Alg. 4 lines 4-6).
+
+Routing searches the (replicated, small) meta-HNSW for the query's top-K
+meta neighbours and marks the partitions containing them. This is exactly
+top-K expert routing: downstream we reuse the same capacity-based dispatch
+machinery as the MoE layers (DESIGN.md §3/§4).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hnsw as H
+
+
+@functools.partial(jax.jit, static_argnames=("metric", "branching_factor",
+                                             "num_shards", "ef"))
+def route_queries(meta: H.HNSWArrays, part_of_center: jnp.ndarray,
+                  queries: jnp.ndarray, *, metric: str,
+                  branching_factor: int, num_shards: int,
+                  ef: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (mask [B, w] bool — shard s must serve query b,
+    meta_ids [B, K] — the routed meta vertices)."""
+    k = branching_factor
+    meta_ids, _ = H.hnsw_search(meta, queries, metric=metric, k=k,
+                                ef=max(ef, k))
+    parts = part_of_center[jnp.clip(meta_ids, 0)]          # [B, K]
+    parts = jnp.where(meta_ids >= 0, parts, -1)
+    onehot = jax.nn.one_hot(
+        jnp.clip(parts, 0), num_shards, dtype=jnp.bool_)
+    onehot = jnp.logical_and(onehot, (parts >= 0)[..., None])
+    return jnp.any(onehot, axis=1), meta_ids
+
+
+def access_rate(mask: jnp.ndarray) -> float:
+    """Fraction of sub-HNSWs touched per query (paper Fig. 5 metric)."""
+    return float(jnp.mean(jnp.sum(mask, axis=1) / mask.shape[1]))

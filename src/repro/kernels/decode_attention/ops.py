@@ -1,0 +1,19 @@
+"""Public op: flash-decode attention (Pallas on TPU, oracle elsewhere)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import flash_decode_pallas
+from repro.kernels.decode_attention.ref import decode_attention_ref
+
+
+def flash_decode(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                 pos: jnp.ndarray, *, block_s: int = 512,
+                 use_kernel: bool = True) -> jnp.ndarray:
+    """Single-token GQA attention over a KV cache. Returns [B, H, hd] f32."""
+    if not use_kernel or k.shape[1] < 16:
+        return decode_attention_ref(q, k, v, pos)
+    return flash_decode_pallas(
+        q, k, v, pos, block_s=block_s,
+        interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle for the flash-decode kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                         pos: jnp.ndarray) -> jnp.ndarray:
+    """Single-token GQA attention against a KV cache.
+
+    Args:
+      q:   [B, H, hd] query heads for the current token.
+      k,v: [B, S, KV, hd] cache (positions > pos are invalid).
+      pos: [B] int32 current position (cache rows 0..pos inclusive valid).
+
+    Returns [B, H, hd] attention output (f32).
+    """
+    b, h, hd = q.shape
+    s, kvh = k.shape[1], k.shape[2]
+    groups = h // kvh
+    qg = q.reshape(b, kvh, groups, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bkgh,bskh->bkgs", qg, kf) * (hd ** -0.5)
+    valid = jnp.arange(s)[None, :] <= pos[:, None]              # [B, S]
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", probs, vf)
+    return out.reshape(b, h, hd)

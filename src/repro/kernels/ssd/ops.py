@@ -1,0 +1,17 @@
+"""Public op: SSD chunk scan (Pallas on TPU, chunked-jnp oracle elsewhere)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.kernel import ssd_pallas
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def ssd_scan(x, dt, a, b_mat, c_mat, *, chunk: int = 128,
+             use_kernel: bool = True):
+    """Mamba2 SSD scan. Returns (y [B,S,H,P], final_state [B,H,N,P])."""
+    if not use_kernel or x.shape[1] < chunk:
+        return ssd_ref(x, dt, a, b_mat, c_mat, chunk=chunk)
+    return ssd_pallas(x, dt, a, b_mat, c_mat, chunk=chunk,
+                      interpret=jax.default_backend() != "tpu")

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: re-exports the model's
+chunked implementation (itself validated against recurrent decode in
+tests/test_arch_smoke.py::test_decode_matches_prefill)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x: jnp.ndarray, dt: jnp.ndarray, a: jnp.ndarray,
+            b_mat: jnp.ndarray, c_mat: jnp.ndarray, *, chunk: int,
+            initial_state=None):
+    """x [B,S,H,P], dt [B,S,H], a [H], b/c [B,S,N] ->
+    (y [B,S,H,P], final_state [B,H,N,P])."""
+    return ssd_chunked(x, dt, a, b_mat, c_mat, chunk=chunk,
+                       initial_state=initial_state)

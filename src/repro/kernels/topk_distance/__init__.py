@@ -1,0 +1,4 @@
+from repro.kernels.topk_distance.ops import topk_similarity
+from repro.kernels.topk_distance.ref import topk_similarity_ref
+
+__all__ = ["topk_similarity", "topk_similarity_ref"]

@@ -1,0 +1,32 @@
+"""Public op: top-k similarity scan (Pallas on TPU, oracle elsewhere).
+
+``topk_similarity`` dispatches to the Pallas kernel with interpret mode on
+CPU (kernel body executed in Python for validation) and compiled mode on
+TPU. Callers that only need tiny problems can use the ref directly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_distance.kernel import topk_similarity_pallas
+from repro.kernels.topk_distance.ref import topk_similarity_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def topk_similarity(queries: jnp.ndarray, database: jnp.ndarray, *, k: int,
+                    metric: str = "l2", block_q: int = 128,
+                    block_n: int = 512, use_kernel: bool = True):
+    """Top-k most-similar database rows for each query.
+
+    Returns (scores [B, k] f32 descending, ids [B, k] i32).
+    """
+    n = database.shape[0]
+    if not use_kernel or n < 32 or k > min(block_n, n):
+        return topk_similarity_ref(queries, database, k=k, metric=metric)
+    return topk_similarity_pallas(
+        queries, database, k=k, metric=metric, block_q=block_q,
+        block_n=block_n, interpret=not _on_tpu())

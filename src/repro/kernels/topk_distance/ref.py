@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the blocked top-k similarity scan kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_similarity_ref(queries: jnp.ndarray, database: jnp.ndarray, *,
+                        k: int, metric: str = "l2"):
+    """Exact top-k by similarity.
+
+    Args:
+      queries:  [B, d]
+      database: [n, d]
+      k: neighbours to return.
+      metric: 'l2' (sim = -||q-x||^2), 'ip' or 'angular'.
+
+    Returns:
+      scores [B, k] f32 descending, ids [B, k] i32.
+    """
+    q = queries.astype(jnp.float32)
+    x = database.astype(jnp.float32)
+    if metric == "l2":
+        sims = 2.0 * q @ x.T - jnp.sum(q * q, -1, keepdims=True) \
+            - jnp.sum(x * x, -1)[None, :]
+    elif metric == "ip":
+        sims = q @ x.T
+    elif metric == "angular":
+        qn = q / (jnp.linalg.norm(q, axis=-1, keepdims=True) + 1e-12)
+        xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
+        sims = qn @ xn.T
+    else:
+        raise ValueError(metric)
+    scores, ids = jax.lax.top_k(sims, k)
+    return scores.astype(jnp.float32), ids.astype(jnp.int32)

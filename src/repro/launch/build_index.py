@@ -1,0 +1,64 @@
+"""Index-building launcher (the paper's GraphConstructor, Sec. IV-A).
+
+PYTHONPATH=src python -m repro.launch.build_index \
+    --n 20000 --d 32 --metric l2 --shards 8 --out /tmp/pyramid_index
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import pickle
+import time
+
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.core.meta_index import PyramidIndex, build_pyramid_index
+from repro.data.synthetic import clustered_vectors, norm_spread_vectors
+
+
+def save_index(index: PyramidIndex, path: str) -> None:
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, "index.pkl"), "wb") as f:
+        pickle.dump(index, f)
+
+
+def load_index(path: str) -> PyramidIndex:
+    with open(os.path.join(path, "index.pkl"), "rb") as f:
+        return pickle.load(f)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--d", type=int, default=32)
+    ap.add_argument("--metric", default="l2",
+                    choices=["l2", "ip", "angular"])
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--meta-size", type=int, default=256)
+    ap.add_argument("--replication-r", type=int, default=0)
+    ap.add_argument("--data", default=None,
+                    help=".npy file with the dataset (default: synthetic)")
+    ap.add_argument("--out", default="/tmp/pyramid_index")
+    args = ap.parse_args()
+
+    if args.data:
+        x = np.load(args.data).astype(np.float32)
+    elif args.metric == "ip":
+        x = norm_spread_vectors(args.n, args.d, 64)
+    else:
+        x = clustered_vectors(args.n, args.d, 64)
+
+    cfg = PyramidConfig(
+        metric=args.metric, num_shards=args.shards,
+        meta_size=args.meta_size, sample_size=min(len(x), 10_000),
+        replication_r=args.replication_r or (300 if args.metric == "ip"
+                                             else 0))
+    t0 = time.time()
+    index = build_pyramid_index(x, cfg, verbose=True)
+    print(f"index built in {time.time()-t0:.1f}s; saving to {args.out}")
+    save_index(index, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,22 @@
+"""Production mesh construction.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required for the dry-run's forced-host-device
+setup ordering.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips, TPU v5e pod) or 2x16x16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh():
+    """Degenerate mesh on whatever devices exist (CPU tests/examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,93 @@
+"""Serving launcher: reduced-scale prefill + decode with optional kNN-LM
+retrieval through a Pyramid datastore.
+
+PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.common.registry import get_arch, list_archs
+from repro.data.synthetic import SyntheticLM
+from repro.models.transformer import grow_cache, init_params
+from repro.serving.decode import decode_step, prefill_step
+from repro.serving.retrieval import (build_datastore, hidden_states,
+                                     interpolate, knn_probs)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b", choices=list_archs())
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--retrieval", action="store_true",
+                    help="kNN-LM interpolation via a Pyramid datastore")
+    ap.add_argument("--lam", type=float, default=0.3)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    if cfg.frontend:
+        prompt = jnp.asarray(rng.normal(size=(
+            args.batch, args.prompt_len, cfg.frontend_dim)).astype(
+                np.float32))
+    else:
+        prompt = jnp.asarray(rng.integers(
+            0, cfg.vocab_size, size=(args.batch, args.prompt_len)),
+            jnp.int32)
+
+    ds = None
+    if args.retrieval:
+        if cfg.frontend:
+            raise SystemExit("--retrieval expects a token-input arch")
+        corpus = rng.integers(0, cfg.vocab_size, size=(8, 64))
+        pyr = PyramidConfig(metric="l2", num_shards=4, meta_size=32,
+                            sample_size=400, branching_factor=2,
+                            max_degree=12, max_degree_upper=6,
+                            ef_construction=40, ef_search=60)
+        ds = build_datastore(params, cfg, [corpus], pyr)
+        print(f"[serve] datastore ready: {ds.values.shape[0]} entries")
+
+    t0 = time.time()
+    logits, cache = prefill_step(params, prompt, cfg=cfg)
+    cache = grow_cache(cache, args.prompt_len + args.tokens,
+                       window=cfg.sliding_window)
+    print(f"[serve] prefill {prompt.shape} in {time.time()-t0:.2f}s")
+
+    tok = jnp.argmax(logits[:, -1:].astype(jnp.float32), -1).astype(jnp.int32)
+    if cfg.frontend:  # frontend archs decode over embedding stand-ins
+        tok_emb = jnp.zeros((args.batch, 1, cfg.frontend_dim), jnp.float32)
+    out_tokens = [np.asarray(tok[:, 0])]
+    t0 = time.time()
+    for t in range(args.tokens - 1):
+        pos = jnp.full((args.batch,), args.prompt_len + t, jnp.int32)
+        inp = tok_emb if cfg.frontend else tok
+        nxt, step_logits, cache = decode_step(params, cache, inp, pos,
+                                              cfg=cfg)
+        if ds is not None:
+            # demo-grade retrieval key: context-free hidden state of the
+            # last token (the retrieval_decode example shows the full flow)
+            kp = knn_probs(ds, np.asarray(
+                hidden_states(params, cfg, tok), np.float32)[:, -1],
+                k=8, vocab_size=cfg.vocab_size)
+            mixed = interpolate(np.asarray(step_logits), kp, lam=args.lam)
+            nxt = jnp.asarray(mixed.argmax(-1), jnp.int32)
+        tok = nxt[:, None]
+        out_tokens.append(np.asarray(nxt))
+    dt = time.time() - t0
+    gen = np.stack(out_tokens, axis=1)
+    print(f"[serve] decoded {args.tokens} tokens/seq in {dt:.2f}s "
+          f"({args.batch*args.tokens/dt:.1f} tok/s)")
+    print(f"[serve] generated ids (row 0): {gen[0][:16]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Mixture-of-Experts layer: top-k routing with capacity-based dispatch.
+
+The dispatch machinery here is deliberately the same shape as Pyramid's
+query routing (DESIGN.md §4): a router scores T tokens against E targets,
+top-k targets per token are selected, and tokens move to per-target slots
+bounded by a capacity factor. Experts are sharded over the ``model`` mesh
+axis (expert parallelism); the dispatch/combine einsums lower to all-to-all
+style collectives under GSPMD.
+
+Load-balancing auxiliary loss follows Shazeer et al. (mean gate * mean
+assignment fraction per expert).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.config import ArchConfig, MoEConfig
+from repro.models import layers as L
+
+
+def init_moe_params(key, cfg: ArchConfig, dtype) -> dict:
+    moe = cfg.moe
+    d, f, e = cfg.d_model, cfg.d_ff, moe.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": L.dense_init(ks[0], (d, e), d, jnp.float32),
+        "e_gate": L.dense_init(ks[1], (e, d, f), d, dtype),
+        "e_in": L.dense_init(ks[2], (e, d, f), d, dtype),
+        "e_out": L.dense_init(ks[3], (e, f, d), f, dtype),
+    }
+
+
+MAX_GROUP = 4096  # tokens per dispatch group
+
+
+def moe_block(p: dict, cfg: ArchConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Grouped capacity dispatch (Switch/GShard style): tokens are split into
+    groups of <= MAX_GROUP and dispatched within each group. A single flat
+    [T, E, C] one-hot at T = 1M tokens would be ~TiB-scale; grouping keeps
+    the dispatch tensor at [G, group, E, C_group] with C_group ~ group/E.
+    """
+    moe = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.num_experts, moe.experts_per_token
+    group = min(MAX_GROUP, t)
+    while t % group:  # find a group size that tiles T exactly
+        group //= 2
+    ng = t // group
+    cap = max(1, int(group * k * moe.capacity_factor / e))
+
+    xt = x.reshape(ng, group, d)
+    logits = jnp.einsum("gtd,de->gte", xt.astype(jnp.float32), p["router"])
+    gates = jax.nn.softmax(logits, axis=-1)                    # [G, T, E]
+
+    topk_g, topk_e = jax.lax.top_k(gates, k)                   # [G, T, k]
+    topk_g = topk_g / (jnp.sum(topk_g, axis=-1, keepdims=True) + 1e-9)
+
+    # capacity assignment within each group's expert queue
+    onehot = jax.nn.one_hot(topk_e, e, dtype=jnp.float32)      # [G, T, k, E]
+    pos_in_queue = jnp.cumsum(onehot, axis=1) - onehot
+    pos = jnp.einsum("gtke,gtke->gtk", pos_in_queue,
+                     onehot).astype(jnp.int32)
+    keep = pos < cap
+    gate_kept = jnp.where(keep, topk_g, 0.0)
+
+    pos_oh = jax.nn.one_hot(pos, cap, dtype=jnp.float32) * \
+        keep[..., None].astype(jnp.float32)                    # [G, T, k, C]
+    dispatch = jnp.einsum("gtke,gtkc->gtec", onehot, pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", gate_kept, onehot, pos_oh)
+
+    # move tokens to expert slots (all-to-all under expert sharding)
+    ex_in = jnp.einsum("gtec,gtd->gecd", dispatch.astype(x.dtype), xt)
+    g_act = jax.nn.silu(jnp.einsum("gecd,edf->gecf", ex_in, p["e_gate"]))
+    h = jnp.einsum("gecd,edf->gecf", ex_in, p["e_in"])
+    ex_out = jnp.einsum("gecf,efd->gecd", g_act * h, p["e_out"])
+    out = jnp.einsum("gtec,gecd->gtd", combine.astype(x.dtype), ex_out)
+
+    # aux load-balance loss (over all tokens)
+    me = jnp.mean(gates, axis=(0, 1))                          # [E]
+    ce = jnp.mean(jnp.sum(onehot, axis=2), axis=(0, 1))        # [E]
+    aux = e * jnp.sum(me * ce)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,40 @@
+"""Rotary position embeddings: standard and 2d-style (chatglm3).
+
+chatglm3 applies rotary to only the first half of each head dim ("2d RoPE"
+lineage from GLM); the second half passes through unrotated.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.common.config import RoPEKind
+
+
+def _rotate(x: jnp.ndarray, positions: jnp.ndarray,
+            theta: float) -> jnp.ndarray:
+    """Apply rotary to the full last dim. x: [B, S, H, D], positions: [B, S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq      # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]                          # [B, S, 1, half]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, *, kind: RoPEKind,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: [B, S, H, D] query or key heads; positions: [B, S] int32."""
+    if kind == RoPEKind.NONE:
+        return x
+    if kind == RoPEKind.STANDARD:
+        return _rotate(x, positions, theta)
+    if kind == RoPEKind.TWO_D:
+        d = x.shape[-1]
+        rot, keep = x[..., : d // 2], x[..., d // 2:]
+        return jnp.concatenate(
+            [_rotate(rot, positions, theta), keep], axis=-1)
+    raise ValueError(kind)

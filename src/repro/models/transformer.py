@@ -1,0 +1,473 @@
+"""Model assembly: heterogeneous layer stacks, scan-over-layers, caches.
+
+The layer stack of an ArchConfig is compiled into *segments*: maximal runs
+of layers with identical (param group, static behaviour). Each group's
+params are stacked on a leading layer axis and each segment runs as one
+``lax.scan`` (with per-layer ``jax.checkpoint`` remat) over its slice —
+this keeps the HLO small for 24..81-layer models and bounds activation
+memory to one layer (MaxText-style).
+
+Groups:
+  attention        — stacked attn(+MLP/MoE) layers (dense/MoE models, gemma3
+                     local & global layers share one stack; the window
+                     behaviour is static per segment)
+  mamba2           — stacked Mamba2 layers
+  shared_attention — ONE weight-tied attention block (zamba2) invoked at
+                     every SHARED_ATTENTION position; each invocation has
+                     its own KV cache slot. (Simplification vs. zamba2's
+                     per-invocation LoRA deltas — recorded in DESIGN.md.)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common import sharding as S
+from repro.common.config import ArchConfig, BlockKind
+from repro.models import layers as L
+from repro.models.attention import (
+    AttnSpec, attention_block, decode_attention_block, init_attention_params,
+    layer_attn_spec, ring_pack)
+from repro.models.moe import init_moe_params, moe_block
+from repro.models.ssm import init_mamba2_params, init_ssm_state, mamba2_block
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    group: str            # param stack name
+    start: int            # offset into the group's stacked params
+    length: int
+    spec: Optional[AttnSpec]  # static attention behaviour (attention groups)
+    cache_start: int      # offset into the cache group's stack
+    cache_group: str = ""  # cache stack name ('<group>@swa' = ring buffer)
+
+
+def cache_group_of(group: str, spec: Optional[AttnSpec]) -> str:
+    """Sliding-window layers keep a RING cache of window size (they never
+    attend beyond the window), full-attention layers a max_seq cache."""
+    if spec is not None and spec.is_sliding:
+        return group + "@swa"
+    return group
+
+
+def build_plan(cfg: ArchConfig) -> Tuple[List[Segment], Dict[str, int]]:
+    """Segment the layer stack; returns (segments, cache_group -> #slots)."""
+    kinds = cfg.layer_kinds()
+    per_layer = []
+    attn_idx = 0
+    for i, kind in enumerate(kinds):
+        if kind == BlockKind.ATTENTION:
+            per_layer.append(("attention", layer_attn_spec(cfg, attn_idx)))
+            attn_idx += 1
+        elif kind == BlockKind.SHARED_ATTENTION:
+            per_layer.append(("shared_attention", layer_attn_spec(cfg, 0)))
+        elif kind == BlockKind.MAMBA2:
+            per_layer.append(("mamba2", None))
+        else:
+            raise ValueError(kind)
+
+    segments: List[Segment] = []
+    offsets = {"attention": 0, "mamba2": 0, "shared_attention": 0}
+    cache_off: Dict[str, int] = {}
+    i = 0
+    while i < len(per_layer):
+        g, spec = per_layer[i]
+        j = i
+        while j < len(per_layer) and per_layer[j] == (g, spec):
+            j += 1
+        length = j - i
+        cg = cache_group_of(g, spec)
+        segments.append(Segment(g, offsets[g], length, spec,
+                                cache_off.get(cg, 0), cg))
+        offsets[g] += length if g != "shared_attention" else 0
+        cache_off[cg] = cache_off.get(cg, 0) + length
+        i = j
+    return segments, cache_off
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_layer(key, cfg: ArchConfig, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"norm_attn": jnp.zeros((cfg.d_model,), dtype),
+         "norm_mlp": jnp.zeros((cfg.d_model,), dtype)}
+    p.update(init_attention_params(ks[0], cfg, dtype))
+    if cfg.moe is not None:
+        p.update(init_moe_params(ks[1], cfg, dtype))
+    else:
+        d, f = cfg.d_model, cfg.d_ff
+        p["w_gate"] = L.dense_init(ks[1], (d, f), d, dtype)
+        p["w_in"] = L.dense_init(ks[2], (d, f), d, dtype)
+        p["w_out"] = L.dense_init(
+            jax.random.fold_in(ks[2], 1), (f, d), f, dtype)
+    return p
+
+
+def _init_mamba_layer(key, cfg: ArchConfig, dtype) -> dict:
+    p = {"norm_in": jnp.zeros((cfg.d_model,), dtype)}
+    p.update(init_mamba2_params(key, cfg, dtype))
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    kinds = cfg.layer_kinds()
+    n_attn = sum(k == BlockKind.ATTENTION for k in kinds)
+    n_mamba = sum(k == BlockKind.MAMBA2 for k in kinds)
+    has_shared = any(k == BlockKind.SHARED_ATTENTION for k in kinds)
+
+    keys = jax.random.split(key, 8)
+    params: dict = {"blocks": {}}
+    if cfg.frontend:
+        params["frontend_proj"] = L.dense_init(
+            keys[0], (cfg.frontend_dim, cfg.d_model), cfg.frontend_dim, dtype)
+    params["embedding"] = L.dense_init(
+        keys[1], (cfg.vocab_size, cfg.d_model), cfg.d_model, dtype)
+    params["final_norm"] = jnp.zeros((cfg.d_model,), dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(
+            keys[2], (cfg.d_model, cfg.vocab_size), cfg.d_model, dtype)
+
+    if n_attn:
+        lkeys = jax.random.split(keys[3], n_attn)
+        params["blocks"]["attention"] = jax.vmap(
+            lambda k: _init_attn_layer(k, cfg, dtype))(lkeys)
+    if n_mamba:
+        lkeys = jax.random.split(keys[4], n_mamba)
+        params["blocks"]["mamba2"] = jax.vmap(
+            lambda k: _init_mamba_layer(k, cfg, dtype))(lkeys)
+    if has_shared:
+        params["blocks"]["shared_attention"] = _init_attn_layer(
+            keys[5], cfg, dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def make_cache(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """Decode caches per cache group (leading dim = #layer instances).
+
+    Sliding-window groups ('<g>@swa') are RING buffers of window length —
+    a 512k-context gemma3 keeps 1024-slot caches for its 40 local layers
+    and full caches only for the 8 global ones.
+    """
+    _, cache_slots = build_plan(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    cache: dict = {}
+    for g, slots in cache_slots.items():
+        if g == "mamba2" or not slots:
+            continue
+        seq = min(cfg.sliding_window, max_seq) if g.endswith("@swa") \
+            else max_seq
+        cache[g] = {
+            "k": jnp.zeros((slots, batch, seq, kvh, hd), dtype),
+            "v": jnp.zeros((slots, batch, seq, kvh, hd), dtype),
+        }
+    if cache_slots.get("mamba2", 0):
+        ssm, conv = init_ssm_state(cfg, batch)
+        slots = cache_slots["mamba2"]
+        cache["mamba2"] = {
+            "ssm": jnp.broadcast_to(ssm[None], (slots,) + ssm.shape),
+            "conv": jnp.broadcast_to(conv[None], (slots,) + conv.shape),
+        }
+    return cache
+
+
+def _residual_constraint(mesh: Optional[Mesh]):
+    """Constrain the residual stream to [batch(data), seq, d(replicated)].
+
+    Without this, GSPMD resolves the (batch over data) x (weight-D over
+    data/fsdp) dot conflict by ALL-GATHERING THE ACTIVATIONS per layer
+    (measured 37 GiB/chip on train_4k); the constraint flips its choice to
+    all-gathering the (small) fsdp-sharded weight — i.e. actual FSDP.
+    """
+    if mesh is None:
+        return lambda x: x
+    bax = S.batch_axes(mesh)
+    spec = bax if len(bax) > 1 else bax[0]
+    sh = NamedSharding(mesh, P(spec, None, None))
+    return lambda x: jax.lax.with_sharding_constraint(x, sh)
+
+
+def grow_cache(cache: dict, max_seq: int, window: int = 0) -> dict:
+    """Pad the kv seq dim of a prefill-built cache to ``max_seq``.
+
+    Ring ('@swa') groups grow only to min(window, max_seq); padding a ring
+    that prefilled fewer than ``window`` positions keeps residue alignment
+    because slot i == position i while p < ring size.
+    """
+    out = {}
+    for g, sub in cache.items():
+        if g == "mamba2":
+            out[g] = sub
+            continue
+        target = min(window, max_seq) if (g.endswith("@swa") and window) \
+            else max_seq
+        if g.endswith("@swa") and not window:
+            target = sub["k"].shape[2]  # leave ring untouched
+
+        def pad(a, t=target):
+            s = a.shape[2]
+            if s >= t:
+                return a
+            padding = [(0, 0)] * a.ndim
+            padding[2] = (0, t - s)
+            return jnp.pad(a, padding)
+
+        out[g] = {k: pad(v) for k, v in sub.items()}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _attn_layer_fwd(p, cfg: ArchConfig, x, positions, spec: AttnSpec,
+                    kv=None, pos=None, build_cache=False):
+    """One attention(+MLP/MoE) layer. Returns (x, aux, new_kv).
+
+    Train/prefill: new_kv is the full-sequence {k, v} when build_cache
+    (for populating the decode cache after prefill), else None.
+    """
+    h = L.rms_norm(x, p["norm_attn"], cfg.norm_eps)
+    if kv is None:
+        attn, k_full, v_full = attention_block(p, cfg, h, positions, spec)
+        new_kv = {"k": k_full, "v": v_full} if build_cache else None
+    else:
+        attn, k_new, v_new = decode_attention_block(
+            p, cfg, h, pos, kv["k"], kv["v"], spec)
+        new_kv = {"k": k_new, "v": v_new}
+    x = x + attn
+    h = L.rms_norm(x, p["norm_mlp"], cfg.norm_eps)
+    if cfg.moe is not None:
+        mlp, aux = moe_block(p, cfg, h)
+    else:
+        mlp = L.swiglu(h, p["w_gate"], p["w_in"], p["w_out"])
+        aux = jnp.float32(0.0)
+    return x + mlp, aux, new_kv
+
+
+def _mamba_layer_fwd(p, cfg: ArchConfig, x, state=None, decode=False):
+    h = L.rms_norm(x, p["norm_in"], cfg.norm_eps)
+    ssm_state = state["ssm"] if state is not None else None
+    conv_state = state["conv"] if state is not None else None
+    out, (new_ssm, new_conv) = mamba2_block(
+        p, cfg, h, ssm_state, conv_state, decode=decode)
+    return x + out, {"ssm": new_ssm, "conv": new_conv}
+
+
+def forward(params: dict, cfg: ArchConfig, inputs: jnp.ndarray, *,
+            positions: Optional[jnp.ndarray] = None,
+            cache: Optional[dict] = None,
+            decode_pos: Optional[jnp.ndarray] = None,
+            remat: bool = True,
+            build_cache: bool = False,
+            skip_head: bool = False,
+            mesh: Optional[Mesh] = None,
+            remat_segments: bool = False) -> Tuple[jnp.ndarray, jnp.ndarray,
+                                                   Optional[dict]]:
+    """Run the model.
+
+    Train: inputs [B, S] int tokens (or [B, S, F] frontend embeds),
+      cache None -> (logits [B, S, V], aux, None).
+    Prefill: as train with build_cache=True -> third output is a cache
+      whose kv seq dim covers the prefill length (pad via
+      ``grow_cache`` before decoding).
+    Decode: inputs [B, 1], cache from ``make_cache``, decode_pos [B] ->
+      (logits [B, 1, V], aux, new_cache).
+    """
+    decode = cache is not None
+    if inputs.ndim == 3:  # modality frontend stub: precomputed embeddings
+        x = jnp.einsum("bsf,fd->bsd", inputs.astype(jnp.dtype(cfg.dtype)),
+                       params["frontend_proj"])
+    else:
+        x = params["embedding"][inputs]
+    b, s = x.shape[:2]
+    if positions is None:
+        if decode:
+            positions = decode_pos[:, None]
+        else:
+            # [1, S], NOT [B, S]: batch-replicated position tensors make
+            # every rope cos/sin (and anything derived) materialise at
+            # GLOBAL batch per chip under GSPMD (measured 14 GiB/chip).
+            positions = jnp.arange(s)[None]
+
+    segments, _ = build_plan(cfg)
+    constrain = _residual_constraint(mesh)
+    x = constrain(x)
+    aux_total = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {g: {} for g in
+                                 (cache or {})} if decode else None
+
+    def slice_tree(tree, start, length):
+        return jax.tree.map(
+            lambda a: jax.lax.slice_in_dim(a, start, start + length, axis=0),
+            tree)
+
+    # collect per-group cache updates as lists of (cache_start, subtree)
+    cache_updates: Dict[str, list] = {}
+
+    for seg in segments:
+        if seg.group == "mamba2":
+            p_seg = slice_tree(params["blocks"]["mamba2"],
+                               seg.start, seg.length)
+            if decode:
+                c_seg = slice_tree(cache["mamba2"],
+                                   seg.cache_start, seg.length)
+
+                def mbody(xc, inp):
+                    pl, cl = inp
+                    xo, st = _mamba_layer_fwd(pl, cfg, xc, cl, decode=True)
+                    return xo, st
+
+                x, new_states = jax.lax.scan(mbody, x, (p_seg, c_seg))
+                cache_updates.setdefault("mamba2", []).append(
+                    (seg.cache_start, new_states))
+            else:
+                def mbody_t(xc, pl):
+                    def run(pp, xx):
+                        xo, st = _mamba_layer_fwd(pp, cfg, constrain(xx))
+                        xo = constrain(xo)
+                        return xo, (st if build_cache else None)
+                    if remat:
+                        run = jax.checkpoint(run)
+                    return run(pl, xc)
+
+                def mseg(ps_, xc):
+                    return jax.lax.scan(mbody_t, xc, ps_)
+
+                if remat_segments and not build_cache:
+                    # hierarchical remat: save one residual per SEGMENT
+                    # instead of per layer (81 -> 14 saves on zamba2);
+                    # backward re-runs the segment forward once
+                    mseg = jax.checkpoint(mseg)
+                x, sts = mseg(p_seg, x)
+                if build_cache:
+                    cache_updates.setdefault("mamba2", []).append(
+                        (seg.cache_start, sts))
+
+        elif seg.group == "attention":
+            p_seg = slice_tree(params["blocks"]["attention"],
+                               seg.start, seg.length)
+            spec = seg.spec
+            if decode:
+                c_seg = slice_tree(cache[seg.cache_group],
+                                   seg.cache_start, seg.length)
+
+                def abody(xc, inp):
+                    pl, cl = inp
+                    xo, aux, kv = _attn_layer_fwd(
+                        pl, cfg, xc, None, spec, kv=cl, pos=decode_pos)
+                    return xo, (kv, aux)
+
+                x, (new_kv, auxs) = jax.lax.scan(abody, x, (p_seg, c_seg))
+                aux_total = aux_total + jnp.sum(auxs)
+                cache_updates.setdefault(seg.cache_group, []).append(
+                    (seg.cache_start, new_kv))
+            else:
+                def abody_t(xc, pl):
+                    def run(pp, xx):
+                        xo, aux, kv = _attn_layer_fwd(
+                            pp, cfg, constrain(xx), positions, spec,
+                            build_cache=build_cache)
+                        return constrain(xo), (aux, kv)
+                    if remat:
+                        run = jax.checkpoint(run)
+                    xo, (aux, kv) = run(pl, xc)
+                    return xo, (aux, kv)
+
+                def aseg(ps_, xc):
+                    return jax.lax.scan(abody_t, xc, ps_)
+
+                if remat_segments and not build_cache:
+                    aseg = jax.checkpoint(aseg)
+                x, (auxs, kvs) = aseg(p_seg, x)
+                aux_total = aux_total + jnp.sum(auxs)
+                if build_cache:
+                    if seg.cache_group.endswith("@swa"):
+                        kvs = jax.tree.map(
+                            lambda a: ring_pack(a, cfg.sliding_window,
+                                                seq_axis=2), kvs)
+                    cache_updates.setdefault(seg.cache_group, []).append(
+                        (seg.cache_start, kvs))
+
+        elif seg.group == "shared_attention":
+            p_sh = params["blocks"]["shared_attention"]
+            spec = seg.spec
+            if decode:
+                c_seg = slice_tree(cache[seg.cache_group],
+                                   seg.cache_start, seg.length)
+                c_one = jax.tree.map(lambda a: a[0], c_seg)
+                x, aux, kv = _attn_layer_fwd(
+                    p_sh, cfg, x, None, spec, kv=c_one, pos=decode_pos)
+                aux_total = aux_total + aux
+                cache_updates.setdefault(seg.cache_group, []).append(
+                    (seg.cache_start,
+                     jax.tree.map(lambda a: a[None], kv)))
+            else:
+                def run_sh(pp, xx):
+                    xo, aux, kv = _attn_layer_fwd(
+                        pp, cfg, constrain(xx), positions, spec,
+                        build_cache=build_cache)
+                    return constrain(xo), (aux, kv)
+                if remat:
+                    x, (aux, kv) = jax.checkpoint(run_sh)(p_sh, x)
+                else:
+                    x, (aux, kv) = run_sh(p_sh, x)
+                aux_total = aux_total + aux
+                if build_cache:
+                    if seg.cache_group.endswith("@swa"):
+                        kv = jax.tree.map(
+                            lambda a: ring_pack(a, cfg.sliding_window,
+                                                seq_axis=1), kv)
+                    cache_updates.setdefault(seg.cache_group, []).append(
+                        (seg.cache_start,
+                         jax.tree.map(lambda a: a[None], kv)))
+        else:
+            raise ValueError(seg.group)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if skip_head:
+        logits = x  # normed hidden states; caller applies a chunked head
+    elif cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embedding"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+    if decode:
+        for g, updates in cache_updates.items():
+            full = cache[g]
+            for start, sub in updates:
+                full = jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+                        a, u.astype(a.dtype), start, axis=0), full, sub)
+            new_cache[g] = full
+        return logits, aux_total, new_cache
+
+    if build_cache:
+        _, cache_slots = build_plan(cfg)
+        prefill_cache: Dict[str, Any] = {}
+        for g, updates in cache_updates.items():
+            slots = cache_slots[g]
+            full = jax.tree.map(
+                lambda u: jnp.zeros((slots,) + u.shape[1:], u.dtype),
+                updates[0][1])
+            for start, sub in updates:
+                full = jax.tree.map(
+                    lambda a, u: jax.lax.dynamic_update_slice_in_dim(
+                        a, u.astype(a.dtype), start, axis=0), full, sub)
+            prefill_cache[g] = full
+        return logits, aux_total, prefill_cache
+    return logits, aux_total, None

@@ -1,0 +1,151 @@
+"""Continuous batching for decode: fixed-slot scheduler over the jitted
+(prefill, decode) steps.
+
+Requests arrive asynchronously with variable-length prompts; the batcher
+keeps a fixed decode batch of ``num_slots`` sequences (static shapes =>
+one compiled decode step), admitting new requests into freed slots and
+evicting finished ones every step — the vLLM-style scheduling loop on top
+of this framework's serving substrate.
+
+Implementation notes:
+  * per-slot prefill (batch=1) writes the prompt's cache, which is then
+    scattered into the shared decode cache at the slot index;
+  * ring (@swa) cache groups scatter identically (slot dim is leading);
+  * stop condition: max_new_tokens or an optional eos id.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ArchConfig
+from repro.models.transformer import forward, grow_cache, make_cache
+from repro.serving.sampler import SamplerConfig, sample
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: np.ndarray            # [S] int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass
+class Completion:
+    request_id: int
+    tokens: List[int]
+    prompt_len: int
+    steps: int
+
+
+class ContinuousBatcher:
+    """Fixed-slot continuous batching over one model."""
+
+    def __init__(self, params, cfg: ArchConfig, *, num_slots: int,
+                 max_seq: int, sampler: SamplerConfig = SamplerConfig(
+                     greedy=True), seed: int = 0):
+        self.params = params
+        self.cfg = cfg
+        self.num_slots = num_slots
+        self.max_seq = max_seq
+        self.sampler = sampler
+        self.key = jax.random.PRNGKey(seed)
+
+        self.cache = make_cache(cfg, num_slots, max_seq)
+        self.pos = np.zeros(num_slots, np.int64)      # next write position
+        self.active: List[Optional[Request]] = [None] * num_slots
+        self.generated: Dict[int, List[int]] = {}
+        self.steps_taken: Dict[int, int] = {}
+        self.last_token = np.zeros(num_slots, np.int64)
+        self.pending: List[Request] = []
+        self.done: List[Completion] = []
+
+        def _decode(params, cache, tokens, pos, key):
+            logits, _, new_cache = forward(
+                params, cfg, tokens, cache=cache, decode_pos=pos)
+            nxt = sample(logits[:, 0], key, self.sampler)
+            return nxt, new_cache
+
+        self._decode = jax.jit(_decode)
+
+    # -- admission -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.pending.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.num_slots):
+            if self.active[slot] is not None or not self.pending:
+                continue
+            req = self.pending.pop(0)
+            self._prefill_into_slot(slot, req)
+
+    def _prefill_into_slot(self, slot: int, req: Request) -> None:
+        prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+        logits, pcache, _ = None, None, None
+        logits, _, pcache = forward(self.params, self.cfg, prompt,
+                                    build_cache=True)
+        pcache = grow_cache(pcache, self.max_seq,
+                            window=self.cfg.sliding_window)
+        # scatter the single-sequence cache into slot `slot`
+        def put(full, one):
+            return full.at[:, slot].set(one[:, 0].astype(full.dtype))
+        self.cache = jax.tree.map(put, self.cache, pcache)
+        first = int(jnp.argmax(logits[0, -1]))
+        self.active[slot] = req
+        self.pos[slot] = len(req.prompt)
+        self.last_token[slot] = first
+        self.generated[req.request_id] = [first]
+        self.steps_taken[req.request_id] = 1
+
+    # -- decode loop -----------------------------------------------------
+
+    def _evict_finished(self) -> None:
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            gen = self.generated[req.request_id]
+            hit_eos = req.eos_id is not None and gen and gen[-1] == req.eos_id
+            full = self.pos[slot] >= self.max_seq - 1
+            if len(gen) >= req.max_new_tokens or hit_eos or full:
+                self.done.append(Completion(
+                    req.request_id, gen, len(req.prompt),
+                    self.steps_taken[req.request_id]))
+                self.active[slot] = None
+
+    def step(self) -> int:
+        """Admit + one decode step for all active slots. Returns the
+        number of active sequences stepped."""
+        self._admit()
+        self._evict_finished()  # prefill may already satisfy eos/max_new
+        live = [s for s in range(self.num_slots)
+                if self.active[s] is not None]
+        if not live:
+            return 0
+        tokens = jnp.asarray(self.last_token[:, None], jnp.int32)
+        pos = jnp.asarray(self.pos, jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        nxt, self.cache = self._decode(self.params, self.cache, tokens,
+                                       pos, sub)
+        nxt = np.asarray(nxt)
+        for slot in live:
+            req = self.active[slot]
+            self.generated[req.request_id].append(int(nxt[slot]))
+            self.steps_taken[req.request_id] += 1
+            self.pos[slot] += 1
+            self.last_token[slot] = int(nxt[slot])
+        self._evict_finished()
+        return len(live)
+
+    def run_until_drained(self, max_steps: int = 10_000) -> List[Completion]:
+        steps = 0
+        while (self.pending or any(a is not None for a in self.active)) \
+                and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.done

@@ -1,0 +1,133 @@
+"""Sharded serving steps: prefill and single-token decode.
+
+Cache sharding policy (adaptive to shape — see DESIGN.md §6):
+  * batch dim   -> data axes when divisible (decode_32k: 128/16),
+  * kv seq dim  -> model axis when the batch cannot shard (long_500k: B=1,
+                   524288/16 splits the cache across chips), else replicated,
+  * kv heads    -> model axis only when divisible (rare: most archs have
+                   fewer kv heads than the model axis; replicated otherwise).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.config import ArchConfig
+from repro.common import sharding as S
+from repro.models.transformer import forward, make_cache
+from repro.train.train_step import abstract_params, param_shardings
+
+
+def _batch_shardable(mesh: Mesh, batch: int) -> bool:
+    n = 1
+    for a in S.batch_axes(mesh):
+        n *= mesh.shape[a]
+    return batch % n == 0
+
+
+def cache_shardings(mesh: Mesh, cfg: ArchConfig, batch: int):
+    """NamedShardings for a ``make_cache``-shaped tree."""
+    bax = S.batch_axes(mesh)
+    bspec = (bax if len(bax) > 1 else bax[0]) if _batch_shardable(
+        mesh, batch) else None
+    model = S.MODEL_AXIS
+    seq_spec = None if bspec is not None else model
+    kv_spec = None  # kv heads rarely divide the model axis; replicate
+
+    abstract = jax.eval_shape(lambda: make_cache(cfg, batch, max(8, getattr(cfg, "sliding_window", 8))))
+
+    def spec_of(path_key, arr):
+        name = path_key[-1]
+        if name in ("k", "v"):
+            seq = arr.shape[2]
+            ss = seq_spec if (seq_spec is not None and
+                              seq % mesh.shape[model] == 0) else None
+            return P(None, bspec, ss, kv_spec, None)
+        if name == "ssm":   # [slots, B, H, N, P]: heads over model
+            h = arr.shape[2]
+            hs = model if h % mesh.shape[model] == 0 else None
+            return P(None, bspec, hs, None, None)
+        if name == "conv":  # [slots, B, W-1, d_inner]
+            d = arr.shape[3]
+            ds = model if d % mesh.shape[model] == 0 else None
+            return P(None, bspec, None, ds)
+        raise KeyError(name)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract)
+    shardings = [NamedSharding(mesh, spec_of(
+        tuple(getattr(k, "key", k) for k in path), leaf))
+        for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, shardings)
+
+
+def token_shardings(mesh: Mesh, cfg: ArchConfig, batch: int, rank: int):
+    bax = S.batch_axes(mesh)
+    bspec = (bax if len(bax) > 1 else bax[0]) if _batch_shardable(
+        mesh, batch) else None
+    return NamedSharding(mesh, P(*([bspec] + [None] * (rank - 1))))
+
+
+def decode_step(params, cache, tokens, pos, *, cfg: ArchConfig,
+                mesh=None):
+    """One greedy decode step.
+
+    tokens [B, 1] (or [B, 1, F] for frontend archs); pos [B].
+    Returns (next_token [B], logits [B, V], new_cache).
+    """
+    logits, _, new_cache = forward(
+        params, cfg, tokens, cache=cache, decode_pos=pos, mesh=mesh)
+    step_logits = logits[:, 0].astype(jnp.float32)
+    nxt = jnp.argmax(step_logits, axis=-1).astype(jnp.int32)
+    return nxt, step_logits, new_cache
+
+
+def prefill_step(params, inputs, *, cfg: ArchConfig, mesh=None):
+    """Prefill: returns (logits [B, S, V], cache covering S positions)."""
+    logits, _, cache = forward(params, cfg, inputs, build_cache=True,
+                               mesh=mesh)
+    return logits, cache
+
+
+def make_decode_step(mesh: Mesh, cfg: ArchConfig, *, batch: int,
+                     max_seq: int):
+    """jit'd decode step with explicit shardings for the mesh."""
+    pshape = abstract_params(cfg)
+    ps = param_shardings(mesh, cfg, pshape)
+    cs = cache_shardings(mesh, cfg, batch)
+    tok_rank = 3 if cfg.frontend else 2
+    ts = token_shardings(mesh, cfg, batch, tok_rank)
+    pos_s = token_shardings(mesh, cfg, batch, 1)
+    vshard = (S.MODEL_AXIS
+              if cfg.vocab_size % mesh.shape[S.MODEL_AXIS] == 0 else None)
+    logits_s = NamedSharding(mesh, P(ts.spec[0], vshard))
+    step = functools.partial(
+        decode_step, cfg=cfg,
+        mesh=mesh if _batch_shardable(mesh, batch) else None)
+    return jax.jit(
+        step,
+        in_shardings=(ps, cs, ts, pos_s),
+        out_shardings=(pos_s, logits_s, cs),
+        donate_argnums=(1,),
+    ), (ps, cs, ts, pos_s)
+
+
+def make_prefill_step(mesh: Mesh, cfg: ArchConfig, *, batch: int,
+                      seq_len: int):
+    pshape = abstract_params(cfg)
+    ps = param_shardings(mesh, cfg, pshape)
+    tok_rank = 3 if cfg.frontend else 2
+    ts = token_shardings(mesh, cfg, batch, tok_rank)
+    bspec = ts.spec[0]
+    vshard = (S.MODEL_AXIS
+              if cfg.vocab_size % mesh.shape[S.MODEL_AXIS] == 0 else None)
+    logits_s = NamedSharding(mesh, P(bspec, None, vshard))
+    cs = cache_shardings(mesh, cfg, batch)
+    step = functools.partial(
+        prefill_step, cfg=cfg,
+        mesh=mesh if _batch_shardable(mesh, batch) else None)
+    return jax.jit(
+        step, in_shardings=(ps, ts), out_shardings=(logits_s, cs)), (ps, ts)

@@ -1,0 +1,296 @@
+"""Coordinator/executor serving engine — the paper's Sec. IV system layer.
+
+Faithful *policy* reproduction of Fig. 4 with Python threads standing in
+for the machine cluster (DESIGN.md §3):
+
+  * one work queue per sub-HNSW = a Kafka *topic*;
+  * executors subscribe to topics; several executors on the same topic form
+    a replica group (the paper's replication for straggler/failure
+    robustness). Queue semantics give Kafka's rebalancing for free: a slow
+    executor simply drains fewer items, the rest are picked up by its
+    replica peers;
+  * coordinators search the (replicated) meta-HNSW, enqueue per-topic
+    requests, and merge partial results returned over a direct result
+    queue (the paper routes partials over bare connections, not Kafka —
+    same here);
+  * a Monitor thread is the Zookeeper/Master analogue: executors heartbeat
+    by touching their lock timestamp; on expiry the monitor restarts the
+    executor on the same "machine" (thread pool).
+
+Straggler injection (`set_cpu_share`) and failure injection (`kill`) drive
+the Fig. 12 / Fig. 13 benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import PyramidConfig
+from repro.core import hnsw as H
+from repro.core import metrics as M
+from repro.core.meta_index import PyramidIndex
+from repro.core.router import route_queries
+
+
+@dataclasses.dataclass
+class QueryRequest:
+    query_id: int
+    vector: np.ndarray
+    k: int
+    num_topics: int           # how many partial results to expect
+    submitted_at: float = 0.0
+
+
+@dataclasses.dataclass
+class PartialResult:
+    query_id: int
+    ids: np.ndarray
+    scores: np.ndarray
+
+
+@dataclasses.dataclass
+class QueryResult:
+    query_id: int
+    ids: np.ndarray
+    scores: np.ndarray
+    latency_s: float
+
+
+class Executor(threading.Thread):
+    """Serves one sub-HNSW replica; pulls from its topic queue."""
+
+    def __init__(self, name: str, topic: "queue.Queue", shard_id: int,
+                 graph_arrays: H.HNSWArrays, metric: str, ef: int,
+                 result_bus: "queue.Queue", heartbeat: Dict[str, float],
+                 batch_max: int = 32, warm_k: int = 10):
+        super().__init__(name=name, daemon=True)
+        self.topic = topic
+        self.shard_id = shard_id
+        self.graph = graph_arrays
+        self.metric = metric
+        self.ef = ef
+        self.result_bus = result_bus
+        self.heartbeat = heartbeat
+        self.batch_max = batch_max
+        self.warm_k = warm_k
+        self.cpu_share = 1.0        # straggler injection: <1 adds sleep
+        self.alive = True
+        self.processed = 0
+
+    def kill(self) -> None:
+        self.alive = False
+
+    def _search(self, batch):
+        """Fixed-size padded search: one jit compilation per executor."""
+        k = batch[0].k
+        vecs = np.stack([r.vector for r in batch])
+        if len(batch) < self.batch_max:  # pad to the compiled shape
+            pad = np.repeat(vecs[:1], self.batch_max - len(batch), axis=0)
+            vecs = np.concatenate([vecs, pad], axis=0)
+        ids, scores = H.hnsw_search(
+            self.graph, jnp.asarray(vecs), metric=self.metric, k=k,
+            ef=self.ef)
+        return np.asarray(ids)[: len(batch)], \
+            np.asarray(scores)[: len(batch)]
+
+    def run(self) -> None:
+        # warm up the jit cache before claiming work
+        dummy = [QueryRequest(-1, np.zeros(self.graph.data.shape[1],
+                                           np.float32), self.warm_k, 0)]
+        self._search(dummy)
+        while self.alive:
+            self.heartbeat[self.name] = time.monotonic()
+            try:
+                first: QueryRequest = self.topic.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            # fetch budget shrinks with cpu share (Kafka max.poll.records
+            # semantics): a throttled consumer must not hoard the queue —
+            # its unfetched records stay available to replica peers
+            budget = max(1, int(self.batch_max * self.cpu_share))
+            batch = [first]
+            while len(batch) < budget:
+                try:
+                    batch.append(self.topic.get_nowait())
+                except queue.Empty:
+                    break
+            if not self.alive:   # killed mid-drain: requeue (at-least-once)
+                for r in batch:
+                    self.topic.put(r)
+                return
+            t0 = time.monotonic()
+            ids, scores = self._search(batch)
+            dt = time.monotonic() - t0
+            if self.cpu_share < 1.0:  # CPU-limit tool analogue
+                time.sleep(dt * (1.0 / self.cpu_share - 1.0))
+            for i, r in enumerate(batch):
+                self.result_bus.put(PartialResult(r.query_id, ids[i],
+                                                  scores[i]))
+            self.processed += len(batch)
+
+
+class Monitor(threading.Thread):
+    """Zookeeper/Master analogue: restart executors whose lock expired."""
+
+    def __init__(self, engine: "ServingEngine", timeout_s: float = 0.5,
+                 period_s: float = 0.1):
+        super().__init__(name="monitor", daemon=True)
+        self.engine = engine
+        self.timeout_s = timeout_s
+        self.period_s = period_s
+        self.running = True
+        self.restarts = 0
+
+    def run(self) -> None:
+        while self.running:
+            time.sleep(self.period_s)
+            now = time.monotonic()
+            for name, ex in list(self.engine.executors.items()):
+                hb = self.engine.heartbeat.get(name, now)
+                if (not ex.is_alive() or not ex.alive or
+                        now - hb > self.timeout_s):
+                    if self.engine.auto_restart and not ex.alive:
+                        self.engine.restart_executor(name)
+                        self.restarts += 1
+
+
+class ServingEngine:
+    """The full Fig. 4 topology for one PyramidIndex."""
+
+    def __init__(self, index: PyramidIndex, *, replicas: int = 1,
+                 ef: Optional[int] = None, auto_restart: bool = True,
+                 executor_batch: int = 16, warm_k: int = 10):
+        self.index = index
+        self.cfg = index.config
+        self.metric = "ip" if self.cfg.is_mips else self.cfg.metric
+        self.ef = ef or self.cfg.ef_search
+        self.w = index.num_shards
+        self.auto_restart = auto_restart
+        self.executor_batch = executor_batch
+        self.warm_k = warm_k
+
+        self.meta_arrays = index.meta_arrays()
+        self.part_of_center = jnp.asarray(index.part_of_center)
+        self.sub_arrays = [index.sub_arrays(i) for i in range(self.w)]
+
+        self.topics: List[queue.Queue] = [queue.Queue()
+                                          for _ in range(self.w)]
+        self.result_bus: "queue.Queue" = queue.Queue()
+        self.heartbeat: Dict[str, float] = {}
+        self.executors: Dict[str, Executor] = {}
+        self._qid = 0
+        self._pending: Dict[int, Tuple[QueryRequest, List[PartialResult]]] = {}
+        self._done: "queue.Queue" = queue.Queue()
+        self._lock = threading.Lock()
+
+        for s in range(self.w):
+            for r in range(replicas):
+                self._spawn(s, r)
+        self.monitor = Monitor(self)
+        self.monitor.start()
+        self._merger = threading.Thread(target=self._merge_loop, daemon=True)
+        self._merger_running = True
+        self._merger.start()
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def _spawn(self, shard: int, replica: int) -> Executor:
+        name = f"exec-s{shard}-r{replica}"
+        ex = Executor(name, self.topics[shard], shard,
+                      self.sub_arrays[shard], self.metric, self.ef,
+                      self.result_bus, self.heartbeat,
+                      batch_max=self.executor_batch, warm_k=self.warm_k)
+        self.executors[name] = ex
+        ex.start()
+        return ex
+
+    def restart_executor(self, name: str) -> None:
+        old = self.executors[name]
+        shard = old.shard_id
+        replica = int(name.split("-r")[1])
+        self._spawn(shard, replica)
+
+    def kill_executor(self, name: str) -> None:
+        self.executors[name].kill()
+
+    def set_cpu_share(self, name: str, share: float) -> None:
+        self.executors[name].cpu_share = share
+
+    def shutdown(self) -> None:
+        self.monitor.running = False
+        self._merger_running = False
+        for ex in self.executors.values():
+            ex.kill()
+
+    # -- query path --------------------------------------------------------
+
+    def submit(self, vectors: np.ndarray, k: int = 10,
+               branching_factor: Optional[int] = None) -> List[int]:
+        """Coordinator: route + enqueue a batch; returns query ids."""
+        q = M.preprocess_queries(vectors, self.cfg.metric)
+        kb = branching_factor or self.cfg.branching_factor
+        mask, _ = route_queries(
+            self.meta_arrays, self.part_of_center, jnp.asarray(q),
+            metric=self.metric, branching_factor=kb, num_shards=self.w,
+            ef=max(64, kb))
+        mask = np.asarray(mask)
+        qids = []
+        now = time.monotonic()
+        with self._lock:
+            for i in range(q.shape[0]):
+                qid = self._qid
+                self._qid += 1
+                topics = np.where(mask[i])[0]
+                req = QueryRequest(qid, q[i], k, len(topics), now)
+                self._pending[qid] = (req, [])
+                for s in topics:
+                    self.topics[s].put(req)
+                qids.append(qid)
+        return qids
+
+    def _merge_loop(self) -> None:
+        while self._merger_running:
+            try:
+                part: PartialResult = self.result_bus.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            with self._lock:
+                if part.query_id not in self._pending:
+                    continue  # duplicate delivery (at-least-once): drop
+                req, parts = self._pending[part.query_id]
+                parts.append(part)
+                if len(parts) < req.num_topics:
+                    continue
+                del self._pending[part.query_id]
+            ids = np.concatenate([p.ids for p in parts])
+            scores = np.concatenate([p.scores for p in parts])
+            order = np.argsort(-scores)
+            seen, top_ids, top_scores = set(), [], []
+            for j in order:
+                v = int(ids[j])
+                if v < 0 or v in seen:
+                    continue
+                seen.add(v)
+                top_ids.append(v)
+                top_scores.append(scores[j])
+                if len(top_ids) == req.k:
+                    break
+            self._done.put(QueryResult(
+                req.query_id, np.asarray(top_ids), np.asarray(top_scores),
+                time.monotonic() - req.submitted_at))
+
+    def collect(self, n: int, timeout: float = 30.0) -> List[QueryResult]:
+        out = []
+        deadline = time.monotonic() + timeout
+        while len(out) < n and time.monotonic() < deadline:
+            try:
+                out.append(self._done.get(timeout=0.1))
+            except queue.Empty:
+                continue
+        return out

@@ -1,0 +1,102 @@
+"""Retrieval-augmented decoding (kNN-LM) on a Pyramid-sharded datastore.
+
+This is where the paper's technique becomes a first-class serving feature
+(DESIGN.md §4): the decoder's last hidden state queries the distributed
+Pyramid index; retrieved (hidden -> next-token) memories are converted to a
+kNN distribution over the vocab and interpolated with the LM distribution
+(Khandelwal et al. kNN-LM — the paper's citation [10] use case).
+
+Datastore keys are hidden states (works identically for attention and
+attention-free archs), values are the observed next tokens.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ArchConfig, PyramidConfig
+from repro.core.meta_index import PyramidIndex, build_pyramid_index
+from repro.core.distributed import search_single_host
+from repro.models.transformer import forward
+
+
+@dataclasses.dataclass
+class Datastore:
+    index: PyramidIndex
+    values: np.ndarray          # [n] int32 next-token ids
+
+
+def build_datastore(params, cfg: ArchConfig, token_batches,
+                    pyr_cfg: PyramidConfig) -> Datastore:
+    """Run the model over batches; store (hidden_state -> next token).
+
+    token_batches: iterable of [B, S] int arrays.
+    """
+    keys = []
+    vals = []
+    for toks in token_batches:
+        toks = jnp.asarray(toks)
+        hidden = hidden_states(params, cfg, toks)      # [B, S, D]
+        # key at position t predicts token t+1
+        keys.append(np.asarray(hidden[:, :-1].reshape(-1, hidden.shape[-1]),
+                               np.float32))
+        vals.append(np.asarray(toks[:, 1:]).reshape(-1).astype(np.int32))
+    x = np.concatenate(keys, axis=0)
+    v = np.concatenate(vals, axis=0)
+    index = build_pyramid_index(x, pyr_cfg)
+    return Datastore(index=index, values=v)
+
+
+def hidden_states(params, cfg: ArchConfig, tokens) -> jnp.ndarray:
+    """Final-norm hidden states [B, S, D] (the kNN-LM key convention).
+
+    Implemented by running ``forward`` with an identity LM head — the
+    "logits" of the modified model ARE the normed hidden states, so no
+    second code path through the trunk exists to drift out of sync.
+    """
+    if cfg.tie_embeddings:
+        raise NotImplementedError("tied-embedding datastore keys")
+    d = cfg.d_model
+    p2 = {**params, "lm_head": jnp.eye(d, dtype=jnp.dtype(cfg.dtype))}
+    cfg2 = dataclasses.replace(cfg, vocab_size=d)
+    hid, _, _ = forward(p2, cfg2, tokens)
+    return hid
+
+
+def knn_probs(datastore: Datastore, queries: np.ndarray, *, k: int,
+              vocab_size: int, temperature: float = 10.0,
+              branching_factor: Optional[int] = None) -> np.ndarray:
+    """kNN next-token distribution per query. queries: [B, D] hidden states.
+
+    Returns [B, V] probabilities (host-side numpy; the search itself runs
+    the jitted Pyramid path).
+    """
+    ids, scores, _ = search_single_host(
+        datastore.index, queries, k=k,
+        branching_factor=branching_factor)
+    b = queries.shape[0]
+    probs = np.zeros((b, vocab_size), np.float32)
+    for i in range(b):
+        valid = ids[i] >= 0
+        if not valid.any():
+            probs[i] = 1.0 / vocab_size
+            continue
+        # scores are similarities (-L2^2 / ip); softmax with temperature
+        s = scores[i][valid] / temperature
+        s = np.exp(s - s.max())
+        s /= s.sum()
+        np.add.at(probs[i], datastore.values[ids[i][valid]], s)
+    return probs
+
+
+def interpolate(lm_logits: np.ndarray, knn_p: np.ndarray,
+                lam: float = 0.25) -> np.ndarray:
+    """p = lam * p_knn + (1-lam) * p_lm; returns log-probs [B, V]."""
+    lm = np.asarray(lm_logits, np.float32)
+    lm_p = np.exp(lm - lm.max(-1, keepdims=True))
+    lm_p /= lm_p.sum(-1, keepdims=True)
+    return np.log(lam * knn_p + (1 - lam) * lm_p + 1e-20)

@@ -1,0 +1,46 @@
+"""Token samplers for the decode loop: greedy, temperature, top-k, top-p.
+
+All operate on [B, V] logits and are jit-able (static config, PRNG key
+threaded explicitly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 1.0
+    top_k: int = 0          # 0 = off
+    top_p: float = 1.0      # 1.0 = off
+    greedy: bool = False
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def sample(logits: jnp.ndarray, key, cfg: SamplerConfig) -> jnp.ndarray:
+    """logits [B, V] -> token ids [B] int32."""
+    logits = logits.astype(jnp.float32)
+    if cfg.greedy:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    logits = logits / jnp.maximum(cfg.temperature, 1e-6)
+
+    if cfg.top_k > 0 and cfg.top_k < logits.shape[-1]:
+        kth = jax.lax.top_k(logits, cfg.top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+
+    if cfg.top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative mass >= top_p (always keep best)
+        cutoff_idx = jnp.sum(cum < cfg.top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

@@ -1,0 +1,68 @@
+"""Minimal sharded-aware checkpointing (npz-based; orbax not available).
+
+Layout: one .npz with flattened param paths + a small JSON manifest with
+step/config metadata. Arrays are gathered to host (fine at the scales this
+container trains); the path-keyed format is restore-order independent.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, *,
+                    step: int = 0, meta: dict = None) -> None:
+    os.makedirs(path, exist_ok=True)
+    np.savez(os.path.join(path, "params.npz"), **_flatten(params))
+    if opt_state is not None:
+        np.savez(os.path.join(path, "opt_mu.npz"), **_flatten(opt_state.mu))
+        np.savez(os.path.join(path, "opt_nu.npz"), **_flatten(opt_state.nu))
+    manifest = {"step": int(step), "meta": meta or {}}
+    with open(os.path.join(path, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+
+
+def _unflatten_into(template, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(template)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        arr = flat[key]
+        assert arr.shape == tuple(leaf.shape), (key, arr.shape, leaf.shape)
+        leaves.append(arr.astype(leaf.dtype))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def load_checkpoint(path: str, params_template,
+                    opt_state_template=None) -> Tuple:
+    """Returns (params, opt_state | None, step)."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    flat = dict(np.load(os.path.join(path, "params.npz")))
+    params = _unflatten_into(params_template, flat)
+    opt_state = None
+    if opt_state_template is not None and \
+            os.path.exists(os.path.join(path, "opt_mu.npz")):
+        mu = _unflatten_into(opt_state_template.mu,
+                             dict(np.load(os.path.join(path, "opt_mu.npz"))))
+        nu = _unflatten_into(opt_state_template.nu,
+                             dict(np.load(os.path.join(path, "opt_nu.npz"))))
+        opt_state = opt_state_template._replace(
+            mu=mu, nu=nu,
+            step=jax.numpy.asarray(manifest["step"], jax.numpy.int32))
+    return params, opt_state, manifest["step"]

@@ -1,0 +1,95 @@
+"""The paper's public API surface (Sec. IV-A Listings 1-3)."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import metrics as M
+from repro.core.api import (Brokers, BuildPara, Coordinator, Executor,
+                            GraphConstructor, QueryPara)
+from repro.data.synthetic import clustered_vectors, query_set
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    path = str(tmp_path_factory.mktemp("idx"))
+    x = clustered_vectors(2000, 12, 16, seed=0)
+    gc = GraphConstructor(x, "l2", path)
+    gc.build_graphs(BuildPara(meta_size=48, num_shards=4, sample_size=1000,
+                              max_degree=12, ef_construction=40))
+    return x, path, gc
+
+
+def test_coordinator_execute(built):
+    x, path, _ = built
+    brokers = Brokers()
+    try:
+        coord = Coordinator(brokers, path, "demo", "l2")
+        q = query_set(x, 1, seed=1)[0]
+        res = coord.execute(q, QueryPara(k=5, branching_factor=2))
+        assert res.ids.shape[0] == 5
+        true_ids, _ = M.brute_force_topk(q[None], x, 5, "l2")
+        assert len(set(res.ids.tolist()) & set(true_ids[0].tolist())) >= 3
+    finally:
+        brokers.shutdown()
+
+
+def test_coordinator_execute_async_callback(built):
+    x, path, _ = built
+    brokers = Brokers()
+    try:
+        coord = Coordinator(brokers, path, "demo2", "l2")
+        q = query_set(x, 1, seed=2)[0]
+        done = threading.Event()
+        out = {}
+
+        def cb(res):
+            out["res"] = res
+            done.set()
+
+        coord.execute_async(q, QueryPara(k=5), cb)
+        assert done.wait(timeout=60)
+        assert out["res"].ids.shape[0] == 5
+    finally:
+        brokers.shutdown()
+
+
+def test_executor_elastic_scaling(built):
+    """Sec. IV-B: executors can be added to a replica group at runtime."""
+    x, path, _ = built
+    brokers = Brokers()
+    try:
+        coord = Coordinator(brokers, path, "demo3", "l2")
+        eng = brokers.engine_for("demo3", coord.index)
+        before = len(eng.executors)
+        ex = Executor(brokers, path, "demo3", "l2", shard_id=0)
+        ex.start()
+        assert len(eng.executors) == before + 1
+        # queries still answered with the extra replica
+        res = coord.execute_batch(query_set(x, 8, seed=3), QueryPara(k=5))
+        assert len(res) == 8
+        ex.stop()
+    finally:
+        brokers.shutdown()
+
+
+def test_graph_constructor_refresh(built, tmp_path):
+    x, path, gc = built
+    brokers = Brokers()
+    try:
+        coord = Coordinator(brokers, path, "demo4", "l2")
+        res = coord.execute(x[0], QueryPara(k=3))
+        assert res.ids.shape[0] == 3
+        # refresh with shifted data; old engine is torn down
+        x2 = x + 100.0
+        gc.refresh(x2, BuildPara(meta_size=48, num_shards=4,
+                                 sample_size=1000, max_degree=12,
+                                 ef_construction=40),
+                   brokers=brokers, name="demo4")
+        coord2 = Coordinator(brokers, path, "demo4", "l2")
+        res2 = coord2.execute(x2[0], QueryPara(k=3))
+        true_ids, _ = M.brute_force_topk(x2[0][None], x2, 3, "l2")
+        assert len(set(res2.ids.tolist()) & set(true_ids[0].tolist())) >= 2
+    finally:
+        brokers.shutdown()

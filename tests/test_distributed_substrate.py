@@ -1,0 +1,67 @@
+"""Distributed substrate pieces not covered elsewhere: distributed kmeans
+vs single-host, multi-shard-per-device SPMD search, sharding helpers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common import sharding as S
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import make_pyramid_search_fn, stack_shards
+from repro.core.kmeans import kmeans, kmeans_distributed
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors, query_set
+
+
+def test_kmeans_distributed_matches_single_host():
+    x = clustered_vectors(1024, 8, 10, seed=0)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    c_dist, n_dist = kmeans_distributed(
+        jnp.asarray(x), 8, mesh, iters=6, seed=3)
+    c_single, n_single = kmeans(x, 8, iters=6, seed=3)
+    np.testing.assert_allclose(np.asarray(c_dist), c_single,
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_array_equal(np.asarray(n_dist), n_single)
+
+
+def test_spmd_search_multiple_shards_per_device():
+    """w=8 shards on a 1-device model axis: the per-device shard loop."""
+    x = clustered_vectors(3000, 16, 24, seed=1)
+    cfg = PyramidConfig(metric="l2", num_shards=8, meta_size=64,
+                        sample_size=1500, branching_factor=2,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=60, kmeans_iters=6)
+    idx = build_pyramid_index(x, cfg)
+    mesh = jax.make_mesh((1,), ("model",))
+    fn = make_pyramid_search_fn(mesh, cfg, k=10, batch=32, ef=60)
+    q = query_set(x, 32, seed=2)
+    ids, scores = fn(stack_shards(idx), idx.meta_arrays(),
+                     jnp.asarray(idx.part_of_center), jnp.asarray(q))
+    true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
+    rec = sum(len(set(np.asarray(a).tolist()) & set(b.tolist()))
+              for a, b in zip(np.asarray(ids), true_ids)) / true_ids.size
+    assert rec > 0.7, rec
+
+
+def test_logical_to_sharding_shaped_divisibility():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # non-divisible dim falls back to replicated without error
+    sh = S.logical_to_sharding_shaped(mesh, ("model", None), (7, 4))
+    assert sh.spec == jax.sharding.PartitionSpec(None, None) or \
+        sh.spec == jax.sharding.PartitionSpec("model", None)  # 7 % 1 == 0
+    mesh16 = jax.make_mesh((1,), ("model",))
+    del mesh16
+
+
+def test_moe_ff_fallback_rule():
+    """grok-style: expert dim smaller than model axis moves TP to d_ff."""
+    from repro.common.registry import get_arch
+    from repro.train.train_step import abstract_params, param_shardings
+    cfg = get_arch("grok-1-314b")
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    ps = param_shardings(mesh, cfg, abstract_params(cfg))
+    spec = ps["blocks"]["attention"]["e_gate"].spec
+    # on a 1x1 mesh everything divides; the rule itself is exercised in
+    # the dry-run — here we assert the spec tree builds without error
+    assert len(spec) <= 4

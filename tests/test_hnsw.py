@@ -1,0 +1,63 @@
+"""HNSW build + search correctness (recall vs brute force)."""
+import numpy as np
+import pytest
+
+from repro.core import hnsw as H
+from repro.core import metrics as M
+
+
+def _recall(found_ids, true_ids):
+    hits = 0
+    for f, t in zip(found_ids, true_ids):
+        hits += len(set(f.tolist()) & set(t.tolist()))
+    return hits / true_ids.size
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=(2000, 16)).astype(np.float32)
+    q = rng.normal(size=(50, 16)).astype(np.float32)
+    return x, q
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip", "angular"])
+def test_build_and_numpy_search_recall(dataset, metric):
+    x, q = dataset
+    x = M.preprocess_dataset(x, metric)
+    q = M.preprocess_queries(q, metric)
+    g = H.build_hnsw(x, metric=metric, max_degree=16, max_degree_upper=8,
+                     ef_construction=60, seed=1)
+    ids, _ = H.search_numpy(g, q, k=10, ef=80)
+    true_ids, _ = M.brute_force_topk(q, x, 10, metric)
+    assert _recall(ids, true_ids) > 0.85
+
+
+@pytest.mark.parametrize("metric", ["l2", "ip"])
+def test_jax_search_matches_numpy_quality(dataset, metric):
+    x, q = dataset
+    g = H.build_hnsw(x, metric=metric, max_degree=16, max_degree_upper=8,
+                     ef_construction=60, seed=1)
+    arrs = g.device_arrays()
+    ids, scores = H.hnsw_search(arrs, q, metric=metric, k=10, ef=80)
+    ids = np.asarray(ids)
+    true_ids, true_scores = M.brute_force_topk(q, x, 10, metric)
+    rec = _recall(ids, true_ids)
+    assert rec > 0.85, f"jax search recall too low: {rec}"
+    # scores must be self-consistent with the data
+    sims = M.similarity_matrix_np(q, x, metric)
+    picked = np.take_along_axis(sims, np.clip(ids, 0, None), axis=1)
+    np.testing.assert_allclose(np.asarray(scores), picked, rtol=1e-4, atol=1e-4)
+
+
+def test_jax_search_sorted_and_valid(dataset):
+    x, q = dataset
+    g = H.build_hnsw(x[:500], metric="l2", max_degree=12, max_degree_upper=6,
+                     ef_construction=40, seed=2)
+    ids, scores = H.hnsw_search(g.device_arrays(), q, metric="l2", k=8, ef=40)
+    ids, scores = np.asarray(ids), np.asarray(scores)
+    assert ids.shape == (q.shape[0], 8)
+    assert (ids >= 0).all() and (ids < 500).all()
+    assert (np.diff(scores, axis=1) <= 1e-5).all(), "scores must be descending"
+    for row in ids:
+        assert len(set(row.tolist())) == len(row), "duplicate results"

@@ -1,0 +1,103 @@
+"""LSH baseline quality + incremental index updates."""
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import search_single_host
+from repro.core.lsh import build_lsh, search_lsh
+from repro.core.meta_index import build_pyramid_index
+from repro.core.updates import add_items, remove_items
+from repro.data.synthetic import clustered_vectors, query_set
+
+
+# ---------------------------------------------------------------------------
+# LSH baseline
+# ---------------------------------------------------------------------------
+
+
+def test_lsh_finds_near_neighbours():
+    x = clustered_vectors(4000, 16, 24, seed=0)
+    q = query_set(x, 40, seed=1)
+    idx = build_lsh(x, metric="l2", num_shards=4, num_tables=12,
+                    num_bits=8, width=3.0)
+    ids, scores = search_lsh(idx, q, k=10)
+    true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
+    hits = sum(len(set(a[a >= 0].tolist()) & set(b.tolist()))
+               for a, b in zip(ids, true_ids))
+    recall = hits / true_ids.size
+    assert recall > 0.5, recall  # LSH is the weaker baseline, by design
+    # scores must be sorted descending among valid entries
+    for r_ids, r_s in zip(ids, scores):
+        v = r_s[r_ids >= 0]
+        assert (np.diff(v) <= 1e-5).all()
+
+
+def test_lsh_recall_grows_with_tables():
+    x = clustered_vectors(3000, 16, 24, seed=2)
+    q = query_set(x, 30, seed=3)
+    true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
+
+    def rec(num_tables):
+        idx = build_lsh(x, metric="l2", num_shards=4,
+                        num_tables=num_tables, num_bits=8, width=3.0)
+        ids, _ = search_lsh(idx, q, k=10)
+        return sum(len(set(a[a >= 0].tolist()) & set(b.tolist()))
+                   for a, b in zip(ids, true_ids)) / true_ids.size
+
+    assert rec(12) > rec(2)
+
+
+# ---------------------------------------------------------------------------
+# incremental updates
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture()
+def small_index():
+    x = clustered_vectors(2000, 16, 16, seed=4)
+    cfg = PyramidConfig(metric="l2", num_shards=4, meta_size=48,
+                        sample_size=1000, branching_factor=2,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=60, kmeans_iters=6)
+    return x, build_pyramid_index(x, cfg)
+
+
+def test_add_items_searchable(small_index):
+    x, idx = small_index
+    rng = np.random.default_rng(5)
+    new = (x[rng.choice(2000, 50)] +
+           0.02 * rng.normal(size=(50, 16))).astype(np.float32)
+    before = idx.build_stats["total_stored"]
+    add_items(idx, new)
+    assert idx.build_stats["total_stored"] == before + 50
+    # querying exactly at the new points must surface their new ids
+    ids, _, _ = search_single_host(idx, new[:20], k=3)
+    new_id_set = set(range(2000, 2050))
+    found = sum(1 for row in ids if set(row.tolist()) & new_id_set)
+    assert found >= 16, found
+
+
+def test_remove_items_gone(small_index):
+    x, idx = small_index
+    victims = np.arange(100, 120)
+    remove_items(idx, victims)
+    stored = np.concatenate([g.ids for g in idx.subs])
+    assert not (set(victims.tolist()) & set(stored.tolist()))
+    # searches no longer return the removed ids
+    ids, _, _ = search_single_host(idx, x[victims][:10], k=5)
+    assert not (set(ids.reshape(-1).tolist()) & set(victims.tolist()))
+
+
+def test_update_then_quality_holds(small_index):
+    x, idx = small_index
+    rng = np.random.default_rng(6)
+    new = clustered_vectors(200, 16, 16, seed=7)
+    add_items(idx, new)
+    full = np.concatenate([x, new])
+    q = query_set(full, 40, seed=8)
+    ids, _, _ = search_single_host(idx, q, k=10)
+    true_ids, _ = M.brute_force_topk(q, full, 10, "l2")
+    hits = sum(len(set(a.tolist()) & set(b.tolist()))
+               for a, b in zip(ids, true_ids))
+    assert hits / true_ids.size > 0.7

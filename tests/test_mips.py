@@ -1,0 +1,83 @@
+"""MIPS-specific behaviour (Alg. 5): spherical partitioning, norm
+replication, balanced sub-datasets, recall at K=1 (paper Fig. 10)."""
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+
+
+@pytest.fixture(scope="module")
+def mips_data():
+    """Norm-spread data like Tiny10M: direction clusters x lognormal norms."""
+    rng = np.random.default_rng(0)
+    dirs = rng.normal(size=(16, 12))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    asg = rng.integers(0, 16, size=2500)
+    x = dirs[asg] + 0.2 * rng.normal(size=(2500, 12))
+    norms = rng.lognormal(mean=0.0, sigma=0.8, size=(2500, 1))
+    x = (x * norms).astype(np.float32)
+    q = rng.normal(size=(40, 12)).astype(np.float32)
+    return x, q
+
+
+def _build(x, r):
+    cfg = PyramidConfig(metric="ip", num_shards=4, meta_size=48,
+                        sample_size=1500, branching_factor=1,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=80,
+                        replication_r=r, kmeans_iters=8)
+    return build_pyramid_index(x, cfg)
+
+
+def test_mips_partitions_balanced(mips_data):
+    """Alg. 5 avoids the 'large norm partition attracts everything' failure."""
+    x, _ = mips_data
+    idx = _build(x, r=0)
+    sizes = np.asarray(idx.build_stats["sub_sizes"], dtype=float)
+    assert sizes.max() / sizes.mean() < 2.0, sizes
+
+
+def test_mips_replication_overhead_small_but_present(mips_data):
+    x, _ = mips_data
+    idx = _build(x, r=30)
+    total = idx.build_stats["total_stored"]
+    assert total > 2500  # replication happened
+    assert total < 2500 * 1.8  # memory overhead bounded (paper: ~0.6%)
+
+
+def test_mips_recall_improves_with_replication(mips_data):
+    x, q = mips_data
+    true_ids, _ = M.brute_force_topk(q, x, 10, "ip")
+
+    def rec(idx):
+        ids, _, mask = search_single_host(idx, q, k=10)
+        r = sum(len(set(a.tolist()) & set(b.tolist()))
+                for a, b in zip(ids, true_ids)) / true_ids.size
+        return r, mask.mean()
+
+    r0, a0 = rec(_build(x, r=0))
+    r1, a1 = rec(_build(x, r=60))
+    # replication pulls large-norm items into every cone -> higher recall
+    # at the same access rate (paper Fig. 10 mechanism)
+    assert r1 > r0 + 0.05, (r0, r1)
+    assert r1 > 0.6, r1
+    assert a1 <= 0.5  # K=1 of 4 shards (+: no access-rate explosion)
+
+
+def test_angular_metric_end_to_end(mips_data):
+    x, q = mips_data
+    cfg = PyramidConfig(metric="angular", num_shards=4, meta_size=48,
+                        sample_size=1500, branching_factor=2,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=60, kmeans_iters=8)
+    idx = build_pyramid_index(x, cfg)
+    ids, _, _ = search_single_host(idx, q, k=10)
+    xn = x / np.linalg.norm(x, axis=1, keepdims=True)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    true_ids, _ = M.brute_force_topk(qn, xn, 10, "ip")
+    r = sum(len(set(a.tolist()) & set(b.tolist()))
+            for a, b in zip(ids, true_ids)) / true_ids.size
+    assert r > 0.6, r

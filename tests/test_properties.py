@@ -1,0 +1,144 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import metrics as M
+from repro.core.partition import balance_stats, partition_graph
+from repro.kernels.topk_distance.kernel import topk_similarity_pallas
+from repro.kernels.topk_distance.ref import topk_similarity_ref
+from repro.models.rope import apply_rope
+from repro.models.ssm import _segsum
+from repro.common.config import RoPEKind
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# kernel: pallas == oracle for arbitrary shapes/metrics
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 12),
+    n=st.integers(8, 200),
+    d=st.integers(2, 48),
+    k=st.integers(1, 8),
+    metric=st.sampled_from(["l2", "ip", "angular"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kernel_matches_oracle(b, n, d, k, metric, seed):
+    k = min(k, n)
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    s_ref, _ = topk_similarity_ref(q, x, k=k, metric=metric)
+    s_ker, ids = topk_similarity_pallas(q, x, k=k, metric=metric,
+                                        block_q=8, block_n=64,
+                                        interpret=True)
+    np.testing.assert_allclose(np.asarray(s_ker), np.asarray(s_ref),
+                               rtol=3e-4, atol=3e-4)
+    ids = np.asarray(ids)
+    assert (ids >= 0).all() and (ids < n).all()
+
+
+# ---------------------------------------------------------------------------
+# partitioning: always a balanced cover
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(16, 150),
+    m=st.integers(2, 6),
+    w=st.integers(2, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_partition_invariants(n, m, w, seed):
+    rng = np.random.default_rng(seed)
+    adj = rng.integers(-1, n, size=(n, m)).astype(np.int32)
+    weights = rng.uniform(0.5, 2.0, size=n)
+    labels = partition_graph(adj, weights, w, seed=seed % 100)
+    assert labels.shape == (n,)
+    assert labels.min() >= 0 and labels.max() < w
+    bal, pw = balance_stats(weights, labels, w)
+    # every part non-empty unless w ~ n
+    assert (pw > 0).sum() >= min(w, n)
+    # weight balance within the epsilon + integrality slack
+    assert bal <= 1.5
+
+
+# ---------------------------------------------------------------------------
+# similarity metrics: invariances
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 40),
+    d=st.integers(2, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_l2_self_similarity_is_max(n, d, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    sims = M.similarity_matrix_np(x, x, "l2")
+    # an item is always (one of) its own nearest neighbours
+    assert np.allclose(np.diag(sims), sims.max(axis=1), atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(2, 30),
+    d=st.integers(2, 16),
+    scale=st.floats(0.1, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_angular_scale_invariance(n, d, scale, seed):
+    rng = np.random.default_rng(seed)
+    q = rng.normal(size=(4, d)).astype(np.float32)
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    s1 = M.similarity_matrix_np(q, x, "angular")
+    s2 = M.similarity_matrix_np(q * scale, x * np.float32(scale), "angular")
+    np.testing.assert_allclose(s1, s2, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# model substrate invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    s=st.integers(1, 16),
+    hd=st.sampled_from([4, 8, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rope_preserves_norm(s, hd, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, s, 3, hd)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (2, s))
+    y = apply_rope(x, pos, kind=RoPEKind.STANDARD)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-4, atol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    q=st.integers(2, 12),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_segsum_matches_bruteforce(q, seed):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(q,)).astype(np.float32))
+    out = np.asarray(_segsum(a))
+    for i in range(q):
+        for j in range(q):
+            if i >= j:
+                expect = float(np.sum(np.asarray(a)[j + 1: i + 1]))
+                np.testing.assert_allclose(out[i, j], expect, atol=1e-5)
+            else:
+                assert out[i, j] == -np.inf

@@ -1,0 +1,158 @@
+"""Serving substrate: prefill->decode consistency, engine robustness
+(straggler + failure, paper Sec. IV-B), kNN-LM retrieval."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.common.registry import get_arch
+from repro.core import metrics as M
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.models.transformer import (forward, grow_cache, init_params,
+                                      make_cache)
+from repro.serving.decode import decode_step, prefill_step
+from repro.serving.engine import ServingEngine
+from repro.serving.retrieval import (Datastore, build_datastore,
+                                     hidden_states, interpolate, knn_probs)
+
+
+# ---------------------------------------------------------------------------
+# prefill -> decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "zamba2-7b"])
+def test_prefill_then_decode_matches_full(arch):
+    cfg = get_arch(arch).reduced()
+    rng = np.random.default_rng(0)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    s = 10
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(1, s + 1)),
+                       jnp.int32)
+    # full forward over s+1 tokens = ground truth for logits at position s
+    full_logits, _, _ = forward(params, cfg, toks, remat=False)
+
+    # prefill s tokens, then decode token s
+    pre_logits, cache = prefill_step(params, toks[:, :s], cfg=cfg)
+    cache = grow_cache(cache, max_seq=s + 4)
+    nxt, step_logits, _ = decode_step(
+        params, cache, toks[:, s: s + 1],
+        jnp.full((1,), s, jnp.int32), cfg=cfg)
+    np.testing.assert_allclose(
+        np.asarray(step_logits[0]),
+        np.asarray(full_logits[0, s], np.float32), rtol=2e-2, atol=2e-2)
+    # prefill logits must equal full logits at earlier positions too
+    np.testing.assert_allclose(
+        np.asarray(pre_logits[0, :s], np.float32),
+        np.asarray(full_logits[0, :s], np.float32), rtol=2e-2, atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def engine_index():
+    x = clustered_vectors(1500, 12, 12, seed=0)
+    cfg = PyramidConfig(metric="l2", num_shards=4, meta_size=48,
+                        sample_size=800, branching_factor=2, max_degree=12,
+                        max_degree_upper=6, ef_construction=40,
+                        ef_search=50, kmeans_iters=6)
+    return x, build_pyramid_index(x, cfg)
+
+
+def test_engine_end_to_end(engine_index):
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        q = query_set(x, 24, seed=3)
+        qids = eng.submit(q, k=10)
+        results = eng.collect(len(qids), timeout=30)
+        assert len(results) == 24
+        true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
+        by_id = {r.query_id: r for r in results}
+        hits = sum(
+            len(set(by_id[qid].ids.tolist()) & set(true_ids[i].tolist()))
+            for i, qid in enumerate(qids))
+        assert hits / true_ids.size > 0.6
+        assert all(r.latency_s < 10 for r in results)
+    finally:
+        eng.shutdown()
+
+
+def test_engine_straggler_mitigation(engine_index):
+    """Replicated topics keep serving when one executor is throttled
+    (paper Fig. 12 mechanism: queue rebalancing offloads the slow one)."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=2)
+    try:
+        eng.set_cpu_share("exec-s0-r0", 0.1)  # heavy straggler
+        q = query_set(x, 64, seed=4)
+        qids = eng.submit(q, k=5)
+        results = eng.collect(len(qids), timeout=300)
+        assert len(results) == len(qids)
+        # the healthy replica of shard 0 must have absorbed most work
+        healthy = eng.executors["exec-s0-r1"].processed
+        slow = eng.executors["exec-s0-r0"].processed
+        assert healthy >= slow
+    finally:
+        eng.shutdown()
+
+
+def test_engine_failure_recovery(engine_index):
+    """Kill an executor mid-stream: replica plus monitor restart keep all
+    queries answered (paper Fig. 13)."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=2, auto_restart=True)
+    try:
+        q = query_set(x, 80, seed=5)
+        qids = eng.submit(q[:40], k=5)
+        eng.kill_executor("exec-s1-r0")
+        qids += eng.submit(q[40:], k=5)
+        results = eng.collect(len(qids), timeout=30)
+        assert len(results) == len(qids)  # no query lost
+        # monitor restarted the killed executor
+        deadline = time.monotonic() + 5
+        while time.monotonic() < deadline and eng.monitor.restarts == 0:
+            time.sleep(0.1)
+        assert eng.monitor.restarts >= 1
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# kNN-LM retrieval
+# ---------------------------------------------------------------------------
+
+
+def test_knn_lm_interpolation_improves_memorized_continuations():
+    cfg = get_arch("qwen3-1.7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    rng = np.random.default_rng(6)
+    toks = rng.integers(0, cfg.vocab_size, size=(8, 24))
+    pyr = PyramidConfig(metric="l2", num_shards=2, meta_size=16,
+                        sample_size=100, branching_factor=2, max_degree=8,
+                        max_degree_upper=4, ef_construction=30,
+                        ef_search=40, kmeans_iters=4)
+    ds = build_datastore(params, cfg, [toks], pyr)
+    assert ds.values.shape[0] == 8 * 23
+
+    # query with hidden states the datastore has seen: kNN mass must land
+    # on the memorized next tokens
+    hid = np.asarray(hidden_states(params, cfg, jnp.asarray(toks)),
+                     np.float32)
+    queries = hid[:, :-1].reshape(-1, cfg.d_model)[:16]
+    gold = toks[:, 1:].reshape(-1)[:16]
+    kp = knn_probs(ds, queries, k=4, vocab_size=cfg.vocab_size)
+    top1 = kp.argmax(-1)
+    assert (top1 == gold).mean() > 0.8
+
+    # interpolation: log-probs well-formed
+    lm_logits = rng.normal(size=(16, cfg.vocab_size)).astype(np.float32)
+    lp = interpolate(lm_logits, kp, lam=0.5)
+    np.testing.assert_allclose(np.exp(lp).sum(-1), 1.0, atol=1e-3)

@@ -1,0 +1,80 @@
+"""End-to-end behaviour tests for the full Pyramid system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def system():
+    """data -> index -> engine, the full production pipeline."""
+    x = clustered_vectors(2500, 16, 20, seed=0)
+    cfg = PyramidConfig(metric="l2", num_shards=4, meta_size=64,
+                        sample_size=1200, branching_factor=2,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=60, kmeans_iters=6)
+    index = build_pyramid_index(x, cfg)
+    return x, index
+
+
+def test_full_pipeline_quality(system):
+    x, index = system
+    eng = ServingEngine(index, replicas=1)
+    try:
+        q = query_set(x, 40, seed=1)
+        qids = eng.submit(q, k=10)
+        res = eng.collect(len(qids), timeout=60)
+        assert len(res) == len(qids)
+        true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
+        by_id = {r.query_id: r for r in res}
+        hits = sum(
+            len(set(by_id[qid].ids.tolist()) & set(true_ids[i].tolist()))
+            for i, qid in enumerate(qids))
+        assert hits / true_ids.size > 0.7
+    finally:
+        eng.shutdown()
+
+
+def test_results_are_deduplicated_and_sorted(system):
+    x, index = system
+    from repro.core.distributed import search_single_host
+    q = query_set(x, 20, seed=2)
+    ids, scores, _ = search_single_host(index, q, k=10)
+    for row_ids, row_scores in zip(ids, scores):
+        valid = row_ids[row_ids >= 0]
+        assert len(set(valid.tolist())) == len(valid)
+        vs = row_scores[row_ids >= 0]
+        assert (np.diff(vs) <= 1e-5).all()
+
+
+def test_index_is_picklable_roundtrip(tmp_path, system):
+    """The paper's GraphConstructor persists indexes for coordinators
+    and executors to load."""
+    from repro.launch.build_index import load_index, save_index
+    x, index = system
+    save_index(index, str(tmp_path))
+    loaded = load_index(str(tmp_path))
+    assert loaded.num_shards == index.num_shards
+    np.testing.assert_array_equal(loaded.part_of_center,
+                                  index.part_of_center)
+    q = query_set(x, 10, seed=3)
+    from repro.core.distributed import search_single_host
+    ids1, _, _ = search_single_host(index, q, k=5)
+    ids2, _, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids1, ids2)
+
+
+def test_query_visits_at_most_k_shards(system):
+    x, index = system
+    from repro.core.distributed import search_single_host
+    q = query_set(x, 30, seed=4)
+    for kb in (1, 2, 3):
+        _, _, mask = search_single_host(index, q, k=5, branching_factor=kb)
+        assert (mask.sum(axis=1) <= kb).all()
+        assert (mask.sum(axis=1) >= 1).all()
