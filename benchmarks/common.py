@@ -9,12 +9,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.common.config import PyramidConfig
 from repro.core import metrics as M
+from repro.core.client import PyramidClient, SearchFuture
+from repro.core.client import gather as client_gather
 from repro.core.meta_index import PyramidIndex, build_pyramid_index
 from repro.data.synthetic import (clustered_vectors, norm_spread_vectors,
                                   query_set)
@@ -75,6 +77,25 @@ def build_index(w: Workload, *, num_shards=NUM_SHARDS, meta_size=META_SIZE,
             seed=seed)
         _CACHE[key] = build_pyramid_index(w.x, cfg)
     return _CACHE[key]
+
+
+def open_client(index: PyramidIndex, *, replicas: int = 1,
+                **engine_kw) -> PyramidClient:
+    """Spin up a ServingEngine for ``index`` and return a client session.
+    Tear down with ``client.engine.shutdown()``."""
+    return PyramidClient.from_index(index, replicas=replicas, **engine_kw)
+
+
+def gather(futures: List[SearchFuture], timeout: float
+           ) -> Tuple[list, int]:
+    """Await a batch under one shared deadline.
+
+    Returns ``(results, timed_out)`` — benchmark code counts stragglers
+    instead of letting the per-query ``TimeoutError`` propagate.
+    """
+    got = client_gather(futures, timeout, return_exceptions=True)
+    results = [r for r in got if not isinstance(r, Exception)]
+    return results, len(got) - len(results)
 
 
 def precision(found_ids: np.ndarray, true_ids: np.ndarray) -> float:

@@ -6,7 +6,6 @@ from __future__ import annotations
 import time
 
 from benchmarks import common as C
-from repro.serving.engine import ServingEngine
 
 
 def run(quick: bool = False):
@@ -16,19 +15,20 @@ def run(quick: bool = False):
     nq = 64 if quick else 128
     rows = []
     for share in shares:
-        eng = ServingEngine(idx, replicas=2)
+        client = C.open_client(idx, replicas=2)
         try:
-            eng.set_cpu_share("exec-s0-r0", share)
+            client.engine.set_cpu_share("exec-s0-r0", share)
             t0 = time.perf_counter()
-            qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=2)
-            res = eng.collect(len(qids), timeout=180)
+            futs = client.search_batch(w.queries[:nq], C.TOPK,
+                                       branching_factor=2)
+            res, _ = C.gather(futs, timeout=180)
             dt = time.perf_counter() - t0
             qps = len(res) / dt
             rows.append((share, qps, len(res)))
             C.emit(f"fig12/straggler_share{share}", dt / max(len(res), 1)
-                   * 1e6, f"qps={qps:.0f};completed={len(res)}/{len(qids)}")
+                   * 1e6, f"qps={qps:.0f};completed={len(res)}/{len(futs)}")
         finally:
-            eng.shutdown()
+            client.engine.shutdown()
     assert rows[0][2] == nq
     return rows
 

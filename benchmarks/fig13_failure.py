@@ -6,41 +6,38 @@ from __future__ import annotations
 import time
 
 from benchmarks import common as C
-from repro.serving.engine import ServingEngine
 
 
 def run(quick: bool = False):
     w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
     idx = C.build_index(w)
     nq = 32 if quick else 64
-    eng = ServingEngine(idx, replicas=2, auto_restart=True)
+    client = C.open_client(idx, replicas=2, auto_restart=True)
+    eng = client.engine
     timeline = []
+
+    def phase_qps(label):
+        t0 = time.perf_counter()
+        futs = client.search_batch(w.queries[:nq], C.TOPK,
+                                   branching_factor=2)
+        res, _ = C.gather(futs, timeout=120)
+        return label, len(res) / (time.perf_counter() - t0), len(res)
+
     try:
-        # phase 1: healthy
-        t0 = time.perf_counter()
-        qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=2)
-        res1 = eng.collect(len(qids), timeout=120)
-        qps1 = len(res1) / (time.perf_counter() - t0)
-        # phase 2: kill one executor mid-service
+        timeline.append(phase_qps("healthy"))
+        # kill one executor mid-service
         eng.kill_executor("exec-s1-r0")
-        t0 = time.perf_counter()
-        qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=2)
-        res2 = eng.collect(len(qids), timeout=120)
-        qps2 = len(res2) / (time.perf_counter() - t0)
-        # phase 3: wait for monitor restart, then measure again
+        timeline.append(phase_qps("failed"))
+        # wait for monitor restart, then measure again
         deadline = time.monotonic() + 10
         while time.monotonic() < deadline and eng.monitor.restarts == 0:
             time.sleep(0.1)
-        t0 = time.perf_counter()
-        qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=2)
-        res3 = eng.collect(len(qids), timeout=120)
-        qps3 = len(res3) / (time.perf_counter() - t0)
-        timeline = [("healthy", qps1, len(res1)), ("failed", qps2, len(res2)),
-                    ("recovered", qps3, len(res3))]
+        timeline.append(phase_qps("recovered"))
         for phase, qps, done in timeline:
             C.emit(f"fig13/{phase}", 1e6 / max(qps, 1e-9),
                    f"qps={qps:.0f};completed={done}/{nq}")
-        C.emit("fig13/restarts", 0.0, f"monitor_restarts={eng.monitor.restarts}")
+        C.emit("fig13/restarts", 0.0,
+               f"monitor_restarts={eng.monitor.restarts}")
         assert all(done == nq for _, _, done in timeline), \
             "no queries may be lost across failure"
     finally:

@@ -6,7 +6,6 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks import common as C
-from repro.serving.engine import ServingEngine
 
 
 def run(quick: bool = False):
@@ -16,18 +15,19 @@ def run(quick: bool = False):
     rows = []
     nq = 64 if quick else 128
     for k in ks:
-        eng = ServingEngine(idx, replicas=1)
+        client = C.open_client(idx, replicas=1)
         try:
-            qids = eng.submit(w.queries[:nq], k=C.TOPK, branching_factor=k)
-            res = eng.collect(len(qids), timeout=120)
+            futs = client.search_batch(w.queries[:nq], C.TOPK,
+                                       branching_factor=k)
+            res, _ = C.gather(futs, timeout=120)
             lat = np.asarray([r.latency_s for r in res])
             p90 = float(np.percentile(lat, 90)) if len(lat) else float("nan")
             rows.append((k, p90))
             C.emit(f"fig8/latency_p90/K{k}", p90 * 1e6,
                    f"p50={np.percentile(lat, 50)*1e3:.1f}ms;"
-                   f"completed={len(res)}/{len(qids)}")
+                   f"completed={len(res)}/{len(futs)}")
         finally:
-            eng.shutdown()
+            client.engine.shutdown()
     return rows
 
 

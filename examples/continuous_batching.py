@@ -1,6 +1,13 @@
 """Continuous batching: more requests than decode slots, slots recycled
 as sequences finish (vLLM-style scheduling on this framework).
 
+This drives the LM decode engine (`serving.batcher`); similarity-search
+traffic has the analogous asynchronous surface in
+`repro.core.client.PyramidClient` — `search_batch` returns
+`SearchFuture`s and `as_completed` streams merges as they land, so a
+retrieval-augmented decode loop can overlap lookups with decoding
+(see API.md and examples/serve_cluster.py).
+
 PYTHONPATH=src python examples/continuous_batching.py
 """
 import time

@@ -1,5 +1,16 @@
 """Quickstart: build a Pyramid index and run distributed similarity search.
 
+This uses the single-host search path (`search_single_host`) — the
+whole index queried in one jitted call, no serving engine. For served
+traffic use the futures-based session API instead (see API.md)::
+
+    with Brokers() as brokers:
+        client = brokers.open_client("demo", index_path, metric="l2")
+        res = client.search(q, k=10).result(timeout=5.0)
+
+`examples/serve_cluster.py` shows that flow end to end, including
+`as_completed` streaming and live `client.scale()` resizing.
+
 PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np

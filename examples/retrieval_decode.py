@@ -15,7 +15,8 @@ from repro.common.registry import get_arch
 from repro.data.synthetic import SyntheticLM
 from repro.models.transformer import init_params
 from repro.serving.retrieval import (build_datastore, hidden_states,
-                                     interpolate, knn_probs)
+                                     interpolate, knn_probs,
+                                     open_datastore_client)
 
 
 def main() -> None:
@@ -32,12 +33,19 @@ def main() -> None:
     print(f"datastore: {ds.values.shape[0]} (hidden -> next-token) entries "
           f"across {ds.index.num_shards} sub-HNSWs")
 
-    # decode continuation for a prompt the datastore has memorised
-    prompt = corpus[:2, :16]
-    hid = np.asarray(hidden_states(params, cfg, jnp.asarray(prompt)),
-                     np.float32)
-    q = hid[:, -1]                         # current-position hidden state
-    kp = knn_probs(ds, q, k=8, vocab_size=cfg.vocab_size)
+    # serve the datastore through the distributed engine: lookups go via
+    # the futures-based PyramidClient session (see API.md)
+    client = open_datastore_client(ds)
+    try:
+        # decode continuation for a prompt the datastore has memorised
+        prompt = corpus[:2, :16]
+        hid = np.asarray(hidden_states(params, cfg, jnp.asarray(prompt)),
+                         np.float32)
+        q = hid[:, -1]                     # current-position hidden state
+        kp = knn_probs(ds, q, k=8, vocab_size=cfg.vocab_size,
+                       client=client)
+    finally:
+        client.engine.shutdown()
 
     from repro.models.transformer import forward
     logits, _, _ = forward(params, cfg, jnp.asarray(prompt))

@@ -1,0 +1,38 @@
+"""Version-compat shims for the jax API surface this repo uses.
+
+The container pins an older jax than some call sites were written
+against; importing through here keeps the version juggling in one
+place.
+
+  * ``shard_map`` moved from ``jax.experimental.shard_map`` to the top
+    level in jax 0.5, and its replication-check kwarg was renamed
+    ``check_rep`` -> ``check_vma``. Call sites use the new spelling.
+  * pallas-TPU compiler params were renamed ``TPUCompilerParams`` ->
+    ``CompilerParams``; kernels import ``CompilerParams`` from here.
+"""
+from __future__ import annotations
+
+import inspect
+
+try:  # jax >= 0.5 exports shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - depends on installed jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from jax.experimental.pallas import tpu as _pltpu
+
+CompilerParams = getattr(_pltpu, "CompilerParams",
+                         getattr(_pltpu, "TPUCompilerParams", None))
+if CompilerParams is None:  # pragma: no cover - future jax renames
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; extend repro.common.jax_compat for this jax")
+
+if "check_vma" in inspect.signature(_shard_map).parameters:
+    shard_map = _shard_map
+else:
+    def shard_map(*args, check_vma=None, **kwargs):
+        """Accepts the jax >= 0.5 kwarg name on older jax."""
+        if check_vma is not None:
+            kwargs["check_rep"] = check_vma
+        return _shard_map(*args, **kwargs)

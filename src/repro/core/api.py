@@ -1,7 +1,7 @@
 """The paper's public API (Sec. IV-A, Listings 1-3).
 
-Thin, faithful wrappers over the engine/index internals so user code reads
-exactly like the paper:
+Thin, faithful wrappers over the futures-based client surface
+(``repro.core.client``) so user code reads exactly like the paper:
 
     gc = GraphConstructor(data_path, name, metric)
     gc.build_graphs(para)
@@ -13,21 +13,30 @@ exactly like the paper:
     ex = Executor(brokers, graph_path_and_id, name, metric)
     ex.start(para)
 
-"brokers" is the in-process engine (our Kafka stand-in, DESIGN.md §3);
-graph paths point at ``launch.build_index`` artifacts.
+New code should use :class:`repro.core.client.PyramidClient` directly
+(see API.md); the classes here exist for fidelity with the paper's
+listings and delegate everything to the client.
+
+"brokers" is the in-process engine registry (our Kafka stand-in,
+DESIGN.md §3); graph paths point at ``launch.build_index`` artifacts.
 """
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 from repro.common.config import PyramidConfig
+from repro.core.client import (PyramidClient, SearchFuture,  # noqa: F401
+                               gather)
 from repro.core.meta_index import PyramidIndex, build_pyramid_index
 from repro.launch.build_index import load_index, save_index
 from repro.serving.engine import QueryResult, ServingEngine
+
+logger = logging.getLogger(__name__)
 
 
 @dataclasses.dataclass
@@ -49,93 +58,239 @@ class BuildPara:
     ef_construction: int = 100
 
 
+def _check_metric(index: PyramidIndex, metric: str) -> None:
+    if not (index.config.metric == metric or
+            (metric == "ip" and index.config.is_mips)):
+        raise ValueError(
+            f"index metric {index.config.metric} != {metric}")
+
+
 class Brokers:
     """Stand-in for the Kafka broker list: owns one ServingEngine per
-    dataset name. Executors/coordinators attach to it."""
+    dataset name. Clients/executors attach to it.
+
+    Usable as a context manager::
+
+        with Brokers() as brokers:
+            client = brokers.open_client("wiki", path)
+            ...
+    # engines shut down on exit
+    """
 
     def __init__(self):
-        self._engines = {}
+        self._engines: Dict[str, ServingEngine] = {}
         self._lock = threading.Lock()
 
+    # -- engine registry ---------------------------------------------------
+
     def engine_for(self, name: str, index: PyramidIndex, *,
-                   replicas: int = 1) -> ServingEngine:
+                   replicas: Optional[int] = None) -> ServingEngine:
+        """Get or create the engine serving ``name``.
+
+        ``replicas=None`` means "attach to whatever is running". When an
+        engine already exists, a conflicting request is never silently
+        ignored: a different index config raises, a different replica
+        count logs a structured warning (the running group is kept —
+        resize explicitly via ``engine.scale``).
+        """
+        with self._lock:   # checks under the lock: a concurrent
+            eng = self._engines.get(name)   # replace_index must not hand
+            if eng is not None:             # back a stale engine
+                return self._check_attach(name, eng, index, replicas)
+        # engine startup (array builds, thread spawns, jit warmup) is
+        # expensive: build outside the lock, install with a re-check
+        new = ServingEngine(index, replicas=replicas or 1)
+        with self._lock:
+            eng = self._engines.get(name)
+            if eng is None:
+                self._engines[name] = new
+                return new
+        new.shutdown()   # lost the creation race: don't leak threads
+        with self._lock:
+            return self._check_attach(name, eng, index, replicas)
+
+    def _check_attach(self, name: str, eng: ServingEngine,
+                      index: PyramidIndex,
+                      replicas: Optional[int]) -> ServingEngine:
+        """Attach to a running engine — never silently: a conflicting
+        index config raises, a conflicting replica count warns."""
+        if index.config != eng.index.config:
+            raise ValueError(
+                f"brokers: engine '{name}' already serves an index "
+                f"with config {eng.index.config}; refusing to attach "
+                f"a mismatched index (config {index.config}). Use "
+                f"replace_index() to hot-swap.")
+        if replicas is not None and replicas != eng.replicas:
+            logger.warning(
+                "brokers.engine_for: engine=%s requested_replicas=%d "
+                "configured_replicas=%d — request ignored; use "
+                "engine.scale(shard, n) to resize the running group "
+                "(live counts: engine.stats()['replicas'])",
+                name, replicas, eng.replicas)
+        return eng
+
+    def get_engine(self, name: str) -> ServingEngine:
         with self._lock:
             if name not in self._engines:
-                self._engines[name] = ServingEngine(index,
-                                                    replicas=replicas)
+                raise KeyError(
+                    f"brokers: no engine named '{name}' "
+                    f"(known: {sorted(self._engines)})")
             return self._engines[name]
+
+    def replace_index(self, name: str,
+                      index: PyramidIndex) -> Optional[ServingEngine]:
+        """Hot-swap ``name``'s engine onto a freshly built index (the
+        paper's ``refresh()`` notification). The replacement engine is
+        started *before* the old one is torn down — carrying over the
+        old engine's *live* per-shard replica counts (which ``scale()``
+        may have grown past the constructor setting) — and clients
+        opened via :meth:`open_client` resolve it on their next call.
+
+        If ``name`` has no running engine there is nothing to swap:
+        returns ``None`` and the next ``open_client`` / ``engine_for``
+        lazily starts on the fresh index (no engine is spawned for a
+        dataset nobody is serving)."""
+        with self._lock:
+            old = self._engines.get(name)
+        if old is None:
+            return None
+        new = ServingEngine(index, replicas=old.replicas)
+        for s in range(min(old.w, new.w)):
+            live = old.replica_count(s)
+            if live >= 1 and live != new.replica_count(s):
+                new.scale(s, live)
+        with self._lock:
+            current = self._engines.get(name)
+            if current is old:   # won the race: install
+                self._engines[name] = new
+            else:   # lost to a concurrent replace_index or shutdown()
+                loser = new
+        if current is old:
+            if old is not None:
+                old.shutdown()
+            return new
+        loser.shutdown()   # never installed: don't leak its threads
+        if current is not None:
+            return current
+        raise RuntimeError(
+            f"brokers: engine '{name}' was removed (brokers shut down?) "
+            f"during replace_index")
+
+    # -- client surface ----------------------------------------------------
+
+    def open_client(self, name: str, path: str, *,
+                    metric: Optional[str] = None,
+                    replicas: Optional[int] = None) -> PyramidClient:
+        """Return a :class:`PyramidClient` session bound to this broker
+        entry — the client tracks ``replace_index`` hot-swaps.
+
+        ``path`` is only read when ``name`` is not yet served (the first
+        session pays the index load; later sessions attach to the
+        running engine and validate against *its* index)."""
+        with self._lock:
+            eng = self._engines.get(name)
+        index = eng.index if eng is not None else load_index(path)
+        if metric is not None:
+            _check_metric(index, metric)
+        self.engine_for(name, index, replicas=replicas)
+        return PyramidClient(
+            engine_resolver=lambda: self.get_engine(name), name=name)
 
     def shutdown(self):
         with self._lock:
-            for e in self._engines.values():
-                e.shutdown()
+            engines = list(self._engines.values())
             self._engines.clear()
+        for e in engines:
+            e.shutdown()
+
+    def __enter__(self) -> "Brokers":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
 
 
 class Coordinator:
-    """Listing 1. Receives queries, routes via the meta-HNSW, merges."""
+    """Listing 1. Receives queries, routes via the meta-HNSW, merges.
+
+    Shim over :class:`PyramidClient`: ``execute*`` submit through the
+    client and block on the returned futures."""
 
     def __init__(self, brokers: Brokers, graph_path: str, name: str,
                  metric: str, replicas: int = 1):
         self.index = load_index(graph_path)
-        assert (self.index.config.metric == metric or
-                (metric == "ip" and self.index.config.is_mips)), \
-            f"index metric {self.index.config.metric} != {metric}"
+        _check_metric(self.index, metric)
         self.name = name
         self.engine = brokers.engine_for(name, self.index,
                                          replicas=replicas)
+        # resolve through the brokers so a replace_index hot-swap (the
+        # paper's refresh) keeps this coordinator working
+        self.client = PyramidClient(
+            engine_resolver=lambda: brokers.get_engine(name), name=name)
 
     def execute(self, query: np.ndarray, para: QueryPara) -> QueryResult:
         """Synchronous top-k search for ONE query vector."""
-        res = self.execute_batch(query[None, :], para)
-        return res[0]
+        return self.client.search(
+            query, para.k,
+            branching_factor=para.branching_factor).result(para.timeout_s)
 
     def execute_batch(self, queries: np.ndarray,
                       para: QueryPara) -> List[QueryResult]:
-        qids = self.engine.submit(queries, k=para.k,
-                                  branching_factor=para.branching_factor)
-        got = self.engine.collect(len(qids), timeout=para.timeout_s)
-        by_id = {r.query_id: r for r in got}
-        return [by_id[q] for q in qids if q in by_id]
+        """Synchronous batch search, one result per query (submit order).
+
+        The whole batch shares one ``para.timeout_s`` deadline; a query
+        missing it raises ``TimeoutError`` — a short result list can no
+        longer be returned silently.
+        """
+        futures = self.client.search_batch(
+            queries, para.k, branching_factor=para.branching_factor)
+        return gather(futures, para.timeout_s)
 
     def execute_async(self, query: np.ndarray, para: QueryPara,
                       callback: Callable[[QueryResult], None]) -> None:
-        """Returns immediately; ``callback`` fires with the final result."""
+        """Returns immediately; ``callback`` fires with the final result
+        (no per-query OS thread — delivery rides the engine's merger)."""
+        fut = self.client.search(query, para.k,
+                                 branching_factor=para.branching_factor)
 
-        def run():
-            callback(self.execute(query, para))
+        def deliver(f):
+            if f.exception() is None:
+                callback(f.result(0))
+            else:   # failed future (e.g. engine shutdown): no result to
+                logger.warning(   # deliver — don't raise into the merger
+                    "execute_async: query %d failed: %s", f.query_id,
+                    f.exception())
 
-        threading.Thread(target=run, daemon=True).start()
+        fut.add_done_callback(deliver)
 
 
 class Executor:
     """Listing 2. In the paper a standalone process serving one sub-HNSW;
-    here executors live inside the engine — ``start`` scales the replica
-    group for this dataset (elastic scalability, Sec. IV-B)."""
+    here executors live inside the engine — ``start`` grows the replica
+    group for this dataset and ``stop`` shrinks it back, both through
+    the public ``engine.scale`` API (elastic scalability, Sec. IV-B)."""
 
     def __init__(self, brokers: Brokers, graph_path: str, name: str,
                  metric: str, shard_id: Optional[int] = None):
         self.index = load_index(graph_path)
+        _check_metric(self.index, metric)
         self.name = name
         self.brokers = brokers
         self.shard_id = shard_id
-        self._started = []
+        self._started: List[int] = []
 
     def start(self, para: Optional[QueryPara] = None) -> None:
         engine = self.brokers.engine_for(self.name, self.index)
         shards = ([self.shard_id] if self.shard_id is not None
                   else range(engine.w))
         for s in shards:
-            replica = sum(1 for n in engine.executors if f"-s{s}-" in n)
-            engine._spawn(s, replica)
-            self._started.append((s, replica))
+            engine.scale(s, engine.replica_count(s) + 1)
+            self._started.append(s)
 
     def stop(self) -> None:
         engine = self.brokers.engine_for(self.name, self.index)
-        for s, r in self._started:
-            name = f"exec-s{s}-r{r}"
-            if name in engine.executors:
-                engine.kill_executor(name)
+        for s in self._started:
+            engine.scale(s, max(1, engine.replica_count(s) - 1))
         self._started.clear()
 
 
@@ -165,13 +320,12 @@ class GraphConstructor:
                 brokers: Optional[Brokers] = None,
                 name: Optional[str] = None) -> PyramidIndex:
         """Re-read the dataset, rebuild, notify coordinators/executors
-        (the paper's ``refresh()``): the engine for ``name`` is torn down
-        and lazily rebuilt on next use with the fresh index."""
+        (the paper's ``refresh()``): the engine for ``name`` is
+        hot-swapped onto the fresh index via
+        :meth:`Brokers.replace_index` — no private state is touched and
+        clients bound through ``open_client`` keep working."""
         self.data = new_data
         index = self.build_graphs(para)
         if brokers is not None and name is not None:
-            with brokers._lock:
-                eng = brokers._engines.pop(name, None)
-            if eng is not None:
-                eng.shutdown()
+            brokers.replace_index(name, index)
         return index

@@ -21,14 +21,14 @@ CPU benchmarks; the SPMD path is validated against it.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.common.jax_compat import shard_map
 
 from repro.common.config import PyramidConfig
 from repro.core import hnsw as H

@@ -14,7 +14,7 @@ and available as a third system for ablations.
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Tuple
 
 import jax.numpy as jnp
 import numpy as np

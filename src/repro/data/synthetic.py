@@ -8,7 +8,7 @@ Tiny (wide norm spread, used for MIPS) datasets at configurable scale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional, Tuple
+from typing import Iterator
 
 import numpy as np
 

@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.jax_compat import CompilerParams as _CompilerParams
+
 NEG_INF = -3.0e38
 
 
@@ -111,7 +113,7 @@ def flash_decode_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             pltpu.VMEM((groups, 1), jnp.float32),
             pltpu.VMEM((groups, hd), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(posr, qr, kr, vr)

@@ -1,5 +1,6 @@
 """Serving launcher: reduced-scale prefill + decode with optional kNN-LM
-retrieval through a Pyramid datastore.
+retrieval through a Pyramid datastore served by the distributed engine
+(lookups go through the futures-based ``PyramidClient`` session).
 
 PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 16
 """
@@ -14,11 +15,11 @@ import numpy as np
 
 from repro.common.config import PyramidConfig
 from repro.common.registry import get_arch, list_archs
-from repro.data.synthetic import SyntheticLM
 from repro.models.transformer import grow_cache, init_params
 from repro.serving.decode import decode_step, prefill_step
 from repro.serving.retrieval import (build_datastore, hidden_states,
-                                     interpolate, knn_probs)
+                                     interpolate, knn_probs,
+                                     open_datastore_client)
 
 
 def main() -> None:
@@ -45,6 +46,7 @@ def main() -> None:
             jnp.int32)
 
     ds = None
+    ds_client = None
     if args.retrieval:
         if cfg.frontend:
             raise SystemExit("--retrieval expects a token-input arch")
@@ -54,35 +56,48 @@ def main() -> None:
                             max_degree=12, max_degree_upper=6,
                             ef_construction=40, ef_search=60)
         ds = build_datastore(params, cfg, [corpus], pyr)
-        print(f"[serve] datastore ready: {ds.values.shape[0]} entries")
+        ds_client = open_datastore_client(ds)
+        print(f"[serve] datastore ready: {ds.values.shape[0]} entries, "
+              f"served by {len(ds_client.stats()['executors'])} executors")
 
-    t0 = time.time()
-    logits, cache = prefill_step(params, prompt, cfg=cfg)
-    cache = grow_cache(cache, args.prompt_len + args.tokens,
-                       window=cfg.sliding_window)
-    print(f"[serve] prefill {prompt.shape} in {time.time()-t0:.2f}s")
+    # everything past this point runs under the datastore engine (when
+    # --retrieval): any failure must still shut its threads down, or the
+    # interpreter can abort at teardown mid-XLA-call
+    try:
+        t0 = time.time()
+        logits, cache = prefill_step(params, prompt, cfg=cfg)
+        cache = grow_cache(cache, args.prompt_len + args.tokens,
+                           window=cfg.sliding_window)
+        print(f"[serve] prefill {prompt.shape} in {time.time()-t0:.2f}s")
 
-    tok = jnp.argmax(logits[:, -1:].astype(jnp.float32), -1).astype(jnp.int32)
-    if cfg.frontend:  # frontend archs decode over embedding stand-ins
-        tok_emb = jnp.zeros((args.batch, 1, cfg.frontend_dim), jnp.float32)
-    out_tokens = [np.asarray(tok[:, 0])]
-    t0 = time.time()
-    for t in range(args.tokens - 1):
-        pos = jnp.full((args.batch,), args.prompt_len + t, jnp.int32)
-        inp = tok_emb if cfg.frontend else tok
-        nxt, step_logits, cache = decode_step(params, cache, inp, pos,
-                                              cfg=cfg)
-        if ds is not None:
-            # demo-grade retrieval key: context-free hidden state of the
-            # last token (the retrieval_decode example shows the full flow)
-            kp = knn_probs(ds, np.asarray(
-                hidden_states(params, cfg, tok), np.float32)[:, -1],
-                k=8, vocab_size=cfg.vocab_size)
-            mixed = interpolate(np.asarray(step_logits), kp, lam=args.lam)
-            nxt = jnp.asarray(mixed.argmax(-1), jnp.int32)
-        tok = nxt[:, None]
-        out_tokens.append(np.asarray(nxt))
-    dt = time.time() - t0
+        tok = jnp.argmax(logits[:, -1:].astype(jnp.float32),
+                         -1).astype(jnp.int32)
+        if cfg.frontend:  # frontend archs decode over embedding stand-ins
+            tok_emb = jnp.zeros((args.batch, 1, cfg.frontend_dim),
+                                jnp.float32)
+        out_tokens = [np.asarray(tok[:, 0])]
+        t0 = time.time()
+        for t in range(args.tokens - 1):
+            pos = jnp.full((args.batch,), args.prompt_len + t, jnp.int32)
+            inp = tok_emb if cfg.frontend else tok
+            nxt, step_logits, cache = decode_step(params, cache, inp, pos,
+                                                  cfg=cfg)
+            if ds is not None:
+                # demo-grade retrieval key: context-free hidden state of
+                # the last token (the retrieval_decode example shows the
+                # full flow)
+                kp = knn_probs(ds, np.asarray(
+                    hidden_states(params, cfg, tok), np.float32)[:, -1],
+                    k=8, vocab_size=cfg.vocab_size, client=ds_client)
+                mixed = interpolate(np.asarray(step_logits), kp,
+                                    lam=args.lam)
+                nxt = jnp.asarray(mixed.argmax(-1), jnp.int32)
+            tok = nxt[:, None]
+            out_tokens.append(np.asarray(nxt))
+        dt = time.time() - t0
+    finally:
+        if ds_client is not None:
+            ds_client.engine.shutdown()
     gen = np.stack(out_tokens, axis=1)
     print(f"[serve] decoded {args.tokens} tokens/seq in {dt:.2f}s "
           f"({args.batch*args.tokens/dt:.1f} tok/s)")

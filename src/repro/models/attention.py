@@ -15,7 +15,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import ArchConfig, AttentionKind, RoPEKind
+from repro.common.config import ArchConfig, AttentionKind
 from repro.models import layers as L
 from repro.models.rope import apply_rope
 

@@ -17,7 +17,7 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.common.config import ArchConfig, MoEConfig
+from repro.common.config import ArchConfig
 from repro.models import layers as L
 
 

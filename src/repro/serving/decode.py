@@ -10,7 +10,6 @@ Cache sharding policy (adaptive to shape — see DESIGN.md §6):
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

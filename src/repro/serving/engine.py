@@ -12,7 +12,10 @@ for the machine cluster (DESIGN.md §3):
   * coordinators search the (replicated) meta-HNSW, enqueue per-topic
     requests, and merge partial results returned over a direct result
     queue (the paper routes partials over bare connections, not Kafka —
-    same here);
+    same here). Merged results are delivered into a per-query
+    ``SearchFuture`` (``repro.core.client``) keyed by query id, so any
+    number of callers can share one engine without seeing each other's
+    results;
   * a Monitor thread is the Zookeeper/Master analogue: executors heartbeat
     by touching their lock timestamp; on expiry the monitor restarts the
     executor on the same "machine" (thread pool).
@@ -26,7 +29,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -34,6 +37,7 @@ import numpy as np
 from repro.common.config import PyramidConfig
 from repro.core import hnsw as H
 from repro.core import metrics as M
+from repro.core.client import EngineShutdownError, SearchFuture
 from repro.core.meta_index import PyramidIndex
 from repro.core.router import route_queries
 
@@ -156,8 +160,8 @@ class Monitor(threading.Thread):
                 if (not ex.is_alive() or not ex.alive or
                         now - hb > self.timeout_s):
                     if self.engine.auto_restart and not ex.alive:
-                        self.engine.restart_executor(name)
-                        self.restarts += 1
+                        if self.engine.restart_executor(name):
+                            self.restarts += 1
 
 
 class ServingEngine:
@@ -184,10 +188,13 @@ class ServingEngine:
         self.result_bus: "queue.Queue" = queue.Queue()
         self.heartbeat: Dict[str, float] = {}
         self.executors: Dict[str, Executor] = {}
+        self.replicas = replicas          # configured replicas per shard
         self._qid = 0
-        self._pending: Dict[int, Tuple[QueryRequest, List[PartialResult]]] = {}
-        self._done: "queue.Queue" = queue.Queue()
+        self._pending: Dict[
+            int, Tuple[QueryRequest, List[PartialResult], SearchFuture]] = {}
         self._lock = threading.Lock()
+        self._scale_lock = threading.Lock()
+        self._shutdown = False
 
         for s in range(self.w):
             for r in range(replicas):
@@ -210,29 +217,143 @@ class ServingEngine:
         ex.start()
         return ex
 
-    def restart_executor(self, name: str) -> None:
-        old = self.executors[name]
-        shard = old.shard_id
-        replica = int(name.split("-r")[1])
-        self._spawn(shard, replica)
+    def restart_executor(self, name: str) -> bool:
+        """Respawn a dead executor under its name; returns whether a
+        respawn actually happened (the monitor counts only those)."""
+        with self._lock:     # serialize against shutdown(): a respawn
+            if self._shutdown:   # landing after its kill snapshot would
+                return False     # leak a forever-running thread
+            old = self.executors.get(name)
+            if old is None:  # retired by scale() since the monitor's scan
+                return False
+            self._spawn(old.shard_id, self._replica_slot(name))
+            return True
 
     def kill_executor(self, name: str) -> None:
+        """Failure injection: the monitor may restart the executor."""
         self.executors[name].kill()
 
     def set_cpu_share(self, name: str, share: float) -> None:
         self.executors[name].cpu_share = share
 
+    @staticmethod
+    def _replica_slot(name: str) -> int:
+        """Slot number from an ``exec-s{shard}-r{slot}`` executor name."""
+        return int(name.split("-r")[1])
+
+    def replica_count(self, shard: int) -> int:
+        """Live replicas currently serving ``shard``'s topic."""
+        return len(self._live_replicas(shard))
+
+    def _live_replicas(self, shard: int) -> List[str]:
+        return sorted(
+            (name for name, ex in list(self.executors.items())
+             if ex.shard_id == shard and ex.alive),
+            key=self._replica_slot)   # numeric: r10 sorts after r2
+
+    def scale(self, shard: int, n_replicas: int) -> List[str]:
+        """Elastic scaling (paper Sec. IV-B): resize ``shard``'s replica
+        group to exactly ``n_replicas`` live executors.
+
+        Scale-down retires the highest-numbered replicas *intentionally*
+        (deregistered before the kill so the monitor does not resurrect
+        them); scale-up spawns fresh replicas on unused slots. Returns
+        the live replica names after the resize.
+        """
+        if not 0 <= shard < self.w:
+            raise ValueError(f"shard {shard} out of range [0, {self.w})")
+        if n_replicas < 1:
+            # zero consumers would strand every query routed to this
+            # topic: futures that never complete
+            raise ValueError(f"n_replicas must be >= 1, got {n_replicas}")
+        with self._scale_lock, self._lock:
+            # _lock serializes the registry mutation against shutdown():
+            # either this resize lands before the kill snapshot (and is
+            # torn down with the rest) or it observes _shutdown and stops
+            if self._shutdown:
+                raise EngineShutdownError("engine is shut down")
+            # deregister this shard's dead-but-registered executors
+            # (failure-injected crashes): scale is the authoritative
+            # resize, so the monitor must not resurrect them afterwards
+            for name, ex in list(self.executors.items()):
+                if ex.shard_id == shard and not ex.alive:
+                    self.executors.pop(name)
+                    self.heartbeat.pop(name, None)
+            live = self._live_replicas(shard)
+            for name in reversed(live[n_replicas:]):   # retire extras
+                ex = self.executors.pop(name)
+                self.heartbeat.pop(name, None)
+                ex.kill()
+            used = {self._replica_slot(n)
+                    for n, ex in list(self.executors.items())
+                    if ex.shard_id == shard}
+            r = 0
+            for _ in range(n_replicas - len(live)):    # grow the group
+                while r in used:
+                    r += 1
+                used.add(r)
+                self._spawn(shard, r)
+            return self._live_replicas(shard)
+
+    def stats(self) -> dict:
+        """Public snapshot of engine state — replaces poking at
+        ``engine.executors`` / ``engine._pending`` internals."""
+        with self._lock:
+            pending = len(self._pending)
+            submitted = self._qid
+        execs = {
+            name: {"shard": ex.shard_id, "alive": ex.alive,
+                   "processed": ex.processed, "cpu_share": ex.cpu_share}
+            for name, ex in sorted(list(self.executors.items()))}
+        return {
+            "num_shards": self.w,
+            "replicas": {s: self.replica_count(s) for s in range(self.w)},
+            "executors": execs,
+            "pending_queries": pending,
+            "submitted_queries": submitted,
+            "monitor_restarts": self.monitor.restarts,
+            "queue_depths": [t.qsize() for t in self.topics],
+        }
+
     def shutdown(self) -> None:
+        with self._lock:   # no submit can register futures after this
+            self._shutdown = True
+            pending = list(self._pending.values())
+            self._pending.clear()
         self.monitor.running = False
         self._merger_running = False
-        for ex in self.executors.values():
-            ex.kill()
+        for ex in list(self.executors.values()):   # snapshot: the monitor
+            ex.kill()                              # may _spawn concurrently
+        for req, _, fut in pending:   # fail in-flight futures loudly
+            fut.set_exception(EngineShutdownError(
+                f"engine shut down with query {req.query_id} in flight"))
+        # join so no thread dies inside an XLA call at interpreter
+        # teardown (aborts the process with "terminate called ...").
+        # One shared deadline: executors killed mid-jit-warmup can take
+        # several seconds to reach their alive check, but they warm up
+        # concurrently, so the total wait is ~one warmup.
+        deadline = time.monotonic() + 15.0
+        for ex in list(self.executors.values()):
+            ex.join(timeout=max(0.0, deadline - time.monotonic()))
+        self.monitor.join(timeout=max(0.1, deadline - time.monotonic()))
+        self._merger.join(timeout=max(0.1, deadline - time.monotonic()))
 
     # -- query path --------------------------------------------------------
 
     def submit(self, vectors: np.ndarray, k: int = 10,
-               branching_factor: Optional[int] = None) -> List[int]:
-        """Coordinator: route + enqueue a batch; returns query ids."""
+               branching_factor: Optional[int] = None
+               ) -> List[SearchFuture]:
+        """Coordinator: route + enqueue a batch; returns one
+        :class:`SearchFuture` per query, in submit order.
+
+        Each future is keyed by its query id inside the engine, so
+        concurrent callers sharing this engine each observe exactly
+        their own results (there is no shared completion queue to steal
+        from), and a caller that times out gets ``TimeoutError`` from
+        ``future.result()`` instead of a silently short batch.
+        """
+        if self._shutdown:
+            raise EngineShutdownError("engine is shut down")
         q = M.preprocess_queries(vectors, self.cfg.metric)
         kb = branching_factor or self.cfg.branching_factor
         mask, _ = route_queries(
@@ -240,19 +361,23 @@ class ServingEngine:
             metric=self.metric, branching_factor=kb, num_shards=self.w,
             ef=max(64, kb))
         mask = np.asarray(mask)
-        qids = []
+        futures = []
         now = time.monotonic()
         with self._lock:
+            if self._shutdown:   # re-check: shutdown may have raced the
+                raise EngineShutdownError(  # routing work above
+                    "engine is shut down")
             for i in range(q.shape[0]):
                 qid = self._qid
                 self._qid += 1
                 topics = np.where(mask[i])[0]
                 req = QueryRequest(qid, q[i], k, len(topics), now)
-                self._pending[qid] = (req, [])
+                fut = SearchFuture(qid)
+                self._pending[qid] = (req, [], fut)
                 for s in topics:
                     self.topics[s].put(req)
-                qids.append(qid)
-        return qids
+                futures.append(fut)
+        return futures
 
     def _merge_loop(self) -> None:
         while self._merger_running:
@@ -263,7 +388,7 @@ class ServingEngine:
             with self._lock:
                 if part.query_id not in self._pending:
                     continue  # duplicate delivery (at-least-once): drop
-                req, parts = self._pending[part.query_id]
+                req, parts, fut = self._pending[part.query_id]
                 parts.append(part)
                 if len(parts) < req.num_topics:
                     continue
@@ -281,16 +406,6 @@ class ServingEngine:
                 top_scores.append(scores[j])
                 if len(top_ids) == req.k:
                     break
-            self._done.put(QueryResult(
+            fut.set_result(QueryResult(
                 req.query_id, np.asarray(top_ids), np.asarray(top_scores),
                 time.monotonic() - req.submitted_at))
-
-    def collect(self, n: int, timeout: float = 30.0) -> List[QueryResult]:
-        out = []
-        deadline = time.monotonic() + timeout
-        while len(out) < n and time.monotonic() < deadline:
-            try:
-                out.append(self._done.get(timeout=0.1))
-            except queue.Empty:
-                continue
-        return out

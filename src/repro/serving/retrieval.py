@@ -8,17 +8,22 @@ kNN distribution over the vocab and interpolated with the LM distribution
 
 Datastore keys are hidden states (works identically for attention and
 attention-free archs), values are the observed next tokens.
+
+Retrieval runs either single-host (``search_single_host``) or through
+the distributed serving engine via a :class:`PyramidClient` session —
+``open_datastore_client`` starts the engine and ``knn_probs(...,
+client=...)`` routes lookups through its futures surface.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ArchConfig, PyramidConfig
+from repro.core.client import PyramidClient, gather
 from repro.core.meta_index import PyramidIndex, build_pyramid_index
 from repro.core.distributed import search_single_host
 from repro.models.transformer import forward
@@ -67,17 +72,48 @@ def hidden_states(params, cfg: ArchConfig, tokens) -> jnp.ndarray:
     return hid
 
 
+def open_datastore_client(datastore: Datastore, *,
+                          replicas: int = 1) -> PyramidClient:
+    """Serve ``datastore.index`` through the distributed engine; the
+    returned session feeds ``knn_probs(..., client=...)``. Callers own
+    teardown: ``client.engine.shutdown()``."""
+    return PyramidClient.from_index(datastore.index, replicas=replicas)
+
+
+def _search_via_client(client: PyramidClient, queries: np.ndarray, k: int,
+                       branching_factor: Optional[int],
+                       timeout_s: float):
+    futures = client.search_batch(queries, k,
+                                  branching_factor=branching_factor)
+    ids = np.full((len(futures), k), -1, np.int64)
+    scores = np.full((len(futures), k), -np.inf, np.float32)
+    for i, r in enumerate(gather(futures, timeout_s)):
+        n = min(len(r.ids), k)
+        ids[i, :n] = r.ids[:n]
+        scores[i, :n] = r.scores[:n]
+    return ids, scores
+
+
 def knn_probs(datastore: Datastore, queries: np.ndarray, *, k: int,
               vocab_size: int, temperature: float = 10.0,
-              branching_factor: Optional[int] = None) -> np.ndarray:
+              branching_factor: Optional[int] = None,
+              client: Optional[PyramidClient] = None,
+              timeout_s: float = 30.0) -> np.ndarray:
     """kNN next-token distribution per query. queries: [B, D] hidden states.
 
     Returns [B, V] probabilities (host-side numpy; the search itself runs
-    the jitted Pyramid path).
+    the jitted Pyramid path). With ``client`` the lookup goes through the
+    distributed serving engine's futures surface instead of the
+    single-host path; a lookup missing ``timeout_s`` raises
+    ``TimeoutError``.
     """
-    ids, scores, _ = search_single_host(
-        datastore.index, queries, k=k,
-        branching_factor=branching_factor)
+    if client is not None:
+        ids, scores = _search_via_client(client, queries, k,
+                                         branching_factor, timeout_s)
+    else:
+        ids, scores, _ = search_single_host(
+            datastore.index, queries, k=k,
+            branching_factor=branching_factor)
     b = queries.shape[0]
     probs = np.zeros((b, vocab_size), np.float32)
     for i in range(b):

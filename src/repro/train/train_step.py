@@ -7,7 +7,6 @@ over ``model`` so the softmax cross-entropy reduces shard-locally.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

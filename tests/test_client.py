@@ -1,0 +1,199 @@
+"""Futures-based PyramidClient surface: per-query result delivery,
+concurrent-session isolation (the old shared ``_done`` queue race),
+``as_completed`` streaming, timeout semantics, elastic ``scale()``."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core.client import (EngineShutdownError, PyramidClient,
+                               SearchFuture, as_completed)
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def engine_index():
+    x = clustered_vectors(1500, 12, 12, seed=0)
+    cfg = PyramidConfig(metric="l2", num_shards=4, meta_size=48,
+                        sample_size=800, branching_factor=2, max_degree=12,
+                        max_degree_upper=6, ef_construction=40,
+                        ef_search=50, kmeans_iters=6)
+    return x, build_pyramid_index(x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# SearchFuture semantics (no engine needed)
+# ---------------------------------------------------------------------------
+
+
+def test_future_timeout_raises_builtin_timeouterror():
+    fut = SearchFuture(7)
+    with pytest.raises(TimeoutError, match="query 7"):
+        fut.result(timeout=0.05)
+    assert not fut.done()
+
+
+def test_future_result_and_callbacks():
+    fut = SearchFuture(1)
+    seen = []
+    fut.add_done_callback(lambda f: seen.append(("early", f.query_id)))
+    fut.set_result("payload")
+    assert fut.done()
+    assert fut.result(timeout=0) == "payload"
+    assert fut.exception() is None
+    # late registration fires immediately
+    fut.add_done_callback(lambda f: seen.append(("late", f.query_id)))
+    assert seen == [("early", 1), ("late", 1)]
+
+
+def test_future_exception_propagates():
+    fut = SearchFuture(2)
+    fut.set_exception(EngineShutdownError("engine gone"))
+    with pytest.raises(EngineShutdownError):
+        fut.result(timeout=0)
+    assert isinstance(fut.exception(), EngineShutdownError)
+
+
+def test_as_completed_yields_in_completion_order():
+    futs = [SearchFuture(i) for i in range(3)]
+    futs[2].set_result("c")
+    futs[0].set_result("a")
+
+    def finish_last():
+        futs[1].set_result("b")
+
+    t = threading.Timer(0.05, finish_last)
+    t.start()
+    got = [f.query_id for f in as_completed(futs, timeout=5)]
+    t.join()
+    # already-done futures drain first; the straggler arrives last
+    assert set(got[:2]) == {0, 2}
+    assert got[2] == 1
+    for f in as_completed(futs, timeout=1):
+        assert f.done()
+
+
+def test_as_completed_timeout():
+    futs = [SearchFuture(0), SearchFuture(1)]
+    futs[0].set_result("a")
+    with pytest.raises(TimeoutError, match="1 of 2"):
+        list(as_completed(futs, timeout=0.1))
+
+
+# ---------------------------------------------------------------------------
+# client sessions over a live engine
+# ---------------------------------------------------------------------------
+
+
+def test_concurrent_clients_get_only_their_own_results(engine_index):
+    """Regression for the shared ``_done``-queue race: two sessions
+    hammering one engine concurrently must each observe exactly their
+    own queries' results. Under the old API both callers drained one
+    queue, so caller A could steal (and mis-merge) caller B's batch."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        # each client queries exact dataset points -> its own point must
+        # come back as the top-1 neighbour (distance 0)
+        own = {"a": np.arange(0, 40), "b": np.arange(700, 740)}
+        clients = {name: PyramidClient(eng, name=name) for name in own}
+        outcome = {}
+        barrier = threading.Barrier(len(own))
+
+        def run(name):
+            barrier.wait()   # maximize interleaving on the engine
+            futs = clients[name].search_batch(x[own[name]], k=3)
+            outcome[name] = [f.result(timeout=60) for f in futs]
+
+        threads = [threading.Thread(target=run, args=(n,)) for n in own]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+        for name, rows in outcome.items():
+            assert len(rows) == len(own[name])
+            top1 = np.asarray([r.ids[0] for r in rows])
+            # every result belongs to this client's own queries
+            assert (top1 == own[name]).mean() > 0.9
+            # query ids are exactly the ones this session submitted
+            assert len({r.query_id for r in rows}) == len(rows)
+        a_ids = {r.query_id for r in outcome["a"]}
+        b_ids = {r.query_id for r in outcome["b"]}
+        assert not (a_ids & b_ids)
+    finally:
+        eng.shutdown()
+
+
+def test_search_single_and_streaming_batch(engine_index):
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        client = PyramidClient(eng)
+        res = client.search(x[5], k=4).result(timeout=60)
+        assert res.ids.shape[0] == 4
+        assert res.ids[0] == 5
+
+        q = query_set(x, 16, seed=1)
+        futs = client.search_batch(q, k=5)
+        done = [f.result(0) for f in as_completed(futs, timeout=60)]
+        assert len(done) == 16
+        assert {r.query_id for r in done} == {f.query_id for f in futs}
+    finally:
+        eng.shutdown()
+
+
+def test_scale_up_down_under_load(engine_index):
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        client = PyramidClient(eng)
+        assert client.stats()["replicas"] == {0: 1, 1: 1, 2: 1, 3: 1}
+
+        names = client.scale(0, 3)
+        assert len(names) == 3
+        assert eng.replica_count(0) == 3
+
+        futs = client.search_batch(query_set(x, 32, seed=2), k=5)
+        client.scale(0, 1)           # shrink while queries are in flight
+        results = [f.result(timeout=60) for f in futs]
+        assert len(results) == 32    # at-least-once requeue: none lost
+        assert eng.replica_count(0) == 1
+        stats = client.stats()
+        assert stats["replicas"][0] == 1
+        assert stats["submitted_queries"] >= 32
+    finally:
+        eng.shutdown()
+
+
+def test_scale_retired_replicas_stay_down(engine_index):
+    """Scale-down must deregister before killing so the monitor treats
+    it as intentional (unlike failure injection, which restarts)."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=2, auto_restart=True)
+    try:
+        assert eng.replica_count(2) == 2
+        eng.scale(2, 1)
+        import time
+        time.sleep(0.5)              # give the monitor a few periods
+        assert eng.replica_count(2) == 1
+    finally:
+        eng.shutdown()
+
+
+def test_shutdown_fails_inflight_futures(engine_index):
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1)
+    client = PyramidClient(eng)
+    futs = client.search_batch(query_set(x, 8, seed=3), k=5)
+    eng.shutdown()
+    for f in futs:
+        try:
+            f.result(timeout=5)      # completed before shutdown: fine
+        except EngineShutdownError:
+            pass                     # failed loudly: also fine
+    with pytest.raises(EngineShutdownError):
+        client.search(x[0], k=3)

@@ -71,14 +71,13 @@ def test_engine_end_to_end(engine_index):
     eng = ServingEngine(idx, replicas=1)
     try:
         q = query_set(x, 24, seed=3)
-        qids = eng.submit(q, k=10)
-        results = eng.collect(len(qids), timeout=30)
+        futures = eng.submit(q, k=10)
+        results = [f.result(timeout=30) for f in futures]
         assert len(results) == 24
         true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
-        by_id = {r.query_id: r for r in results}
         hits = sum(
-            len(set(by_id[qid].ids.tolist()) & set(true_ids[i].tolist()))
-            for i, qid in enumerate(qids))
+            len(set(r.ids.tolist()) & set(true_ids[i].tolist()))
+            for i, r in enumerate(results))
         assert hits / true_ids.size > 0.6
         assert all(r.latency_s < 10 for r in results)
     finally:
@@ -93,9 +92,9 @@ def test_engine_straggler_mitigation(engine_index):
     try:
         eng.set_cpu_share("exec-s0-r0", 0.1)  # heavy straggler
         q = query_set(x, 64, seed=4)
-        qids = eng.submit(q, k=5)
-        results = eng.collect(len(qids), timeout=300)
-        assert len(results) == len(qids)
+        futures = eng.submit(q, k=5)
+        results = [f.result(timeout=300) for f in futures]
+        assert len(results) == len(futures)
         # the healthy replica of shard 0 must have absorbed most work
         healthy = eng.executors["exec-s0-r1"].processed
         slow = eng.executors["exec-s0-r0"].processed
@@ -111,11 +110,11 @@ def test_engine_failure_recovery(engine_index):
     eng = ServingEngine(idx, replicas=2, auto_restart=True)
     try:
         q = query_set(x, 80, seed=5)
-        qids = eng.submit(q[:40], k=5)
+        futures = eng.submit(q[:40], k=5)
         eng.kill_executor("exec-s1-r0")
-        qids += eng.submit(q[40:], k=5)
-        results = eng.collect(len(qids), timeout=30)
-        assert len(results) == len(qids)  # no query lost
+        futures += eng.submit(q[40:], k=5)
+        results = [f.result(timeout=30) for f in futures]
+        assert len(results) == len(futures)  # no query lost
         # monitor restarted the killed executor
         deadline = time.monotonic() + 5
         while time.monotonic() < deadline and eng.monitor.restarts == 0:

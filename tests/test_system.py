@@ -28,14 +28,13 @@ def test_full_pipeline_quality(system):
     eng = ServingEngine(index, replicas=1)
     try:
         q = query_set(x, 40, seed=1)
-        qids = eng.submit(q, k=10)
-        res = eng.collect(len(qids), timeout=60)
-        assert len(res) == len(qids)
+        futures = eng.submit(q, k=10)
+        res = [f.result(timeout=60) for f in futures]
+        assert len(res) == len(futures)
         true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
-        by_id = {r.query_id: r for r in res}
         hits = sum(
-            len(set(by_id[qid].ids.tolist()) & set(true_ids[i].tolist()))
-            for i, qid in enumerate(qids))
+            len(set(r.ids.tolist()) & set(true_ids[i].tolist()))
+            for i, r in enumerate(res))
         assert hits / true_ids.size > 0.7
     finally:
         eng.shutdown()
