@@ -1,34 +1,134 @@
 """Paper Fig. 7: query throughput vs branching factor K.
-Expectation: throughput drops as K grows (more shards touched per query)."""
+Expectation: throughput drops as K grows (more shards touched per query).
+
+Also the before/after microbench for the fused arena pipeline:
+
+  * each K is timed end-to-end on BOTH the fused route->search->merge
+    path (``search_single_host``, device-resident ShardArena) and the
+    pre-arena per-shard Python loop (``search_single_host_python``);
+  * the merge stage is benchmarked in isolation on the same fig7-style
+    partial results: the on-device ``merge_topk`` dedup kernel vs the
+    Python argsort+set loop it replaced, at the fig7 batch and at a
+    serving-sized batch.
+
+``--out`` writes everything to a ``BENCH_*.json`` artifact so CI tracks
+the perf trajectory.
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import time
 
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from benchmarks import common as C
-from repro.core.distributed import search_single_host
+from repro.core import metrics as M
+from repro.core.arena import scatter_partials, shard_search
+from repro.core.distributed import (python_loop_merge, search_single_host,
+                                    search_single_host_python)
+from repro.core.router import route_queries
+from repro.kernels.merge_topk import merge_impl, merge_topk
+
+PATHS = {
+    "fused": search_single_host,
+    "python": search_single_host_python,
+}
 
 
-def run(quick: bool = False):
+def _best_of(fn, reps: int = 3) -> float:
+    """Min wall-clock over ``reps`` runs (noise-robust CI timing)."""
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _merge_microbench(idx, workload, repeat_queries: int = 8):
+    """Time ONLY the coordinator merge, before vs after, on real fig7
+    partials (route + per-shard search once, then merge both ways)."""
+    q = M.preprocess_queries(workload.queries, workload.metric)
+    qj = jnp.asarray(q)
+    mask, _ = route_queries(
+        idx.meta_arrays(), jnp.asarray(idx.part_of_center), qj,
+        metric=idx.config.metric, branching_factor=2,
+        num_shards=idx.num_shards, ef=64)
+    b = q.shape[0]
+    cap = int(np.asarray(mask).sum(axis=0).max())
+    fn = jax.jit(lambda a, m, queries: scatter_partials(
+        *shard_search(a, m, queries, metric=idx.config.metric, k=C.TOPK,
+                      ef=idx.config.ef_search, capacity=cap,
+                      shard_axis="map"), b))
+    flat_s, flat_i = fn(idx.arena(), mask, qj)
+    out = {}
+    for tile in (1, repeat_queries):
+        fs = jnp.tile(flat_s, (tile, 1))
+        fi = jnp.tile(flat_i, (tile, 1))
+        rows = fs.shape[0]
+        dev = jax.jit(lambda s, i: merge_topk(s, i, k=C.TOPK))
+        jax.block_until_ready(dev(fs, fi))          # warm
+        t_device = _best_of(lambda: jax.block_until_ready(dev(fs, fi)))
+        fs_n, fi_n = np.asarray(fs), np.asarray(fi)
+        t_python = _best_of(lambda: python_loop_merge(fs_n, fi_n, C.TOPK))
+        out[f"batch_{rows}"] = {
+            "device_us_per_query": t_device / rows * 1e6,
+            "python_us_per_query": t_python / rows * 1e6,
+            "device_speedup": t_python / t_device,
+        }
+        C.emit(f"fig7/merge/device/B{rows}", t_device / rows * 1e6,
+               f"speedup_vs_python={t_python / t_device:.2f}x")
+        C.emit(f"fig7/merge/python/B{rows}", t_python / rows * 1e6, "-")
+    # record which merge implementation merge_topk actually dispatched
+    out["merge_impl"] = merge_impl()
+    out["backend"] = jax.default_backend()
+    return out
+
+
+def run(quick: bool = False, out: str | None = None):
     w = C.euclidean_workload(n=4_000 if quick else C.N_ITEMS)
     idx = C.build_index(w)
     ks = (1, 2, 4, 8) if not quick else (1, 4)
     rows = []
-    # warm the jit caches
-    search_single_host(idx, w.queries[:8], k=C.TOPK, branching_factor=1)
     for k in ks:
-        t0 = time.perf_counter()
-        ids, _, mask = search_single_host(
-            idx, w.queries, k=C.TOPK, branching_factor=k)
-        dt = time.perf_counter() - t0
-        qps = len(w.queries) / dt
-        rows.append((k, qps))
-        C.emit(f"fig7/throughput/K{k}", dt / len(w.queries) * 1e6,
-               f"qps={qps:.0f};precision={C.precision(ids, w.true_ids):.3f}")
+        row = {"K": k}
+        for name, fn in PATHS.items():
+            # warm the jit caches for this (path, K) before timing
+            ids, _, _ = fn(idx, w.queries, k=C.TOPK, branching_factor=k)
+            dt = _best_of(
+                lambda: fn(idx, w.queries, k=C.TOPK, branching_factor=k))
+            qps = len(w.queries) / dt
+            prec = C.precision(ids, w.true_ids)
+            row[name] = {"qps": qps, "precision": prec,
+                         "us_per_query": dt / len(w.queries) * 1e6}
+            C.emit(f"fig7/throughput/{name}/K{k}",
+                   dt / len(w.queries) * 1e6,
+                   f"qps={qps:.0f};precision={prec:.3f}")
+        row["fused_speedup"] = row["fused"]["qps"] / row["python"]["qps"]
+        rows.append(row)
+    merge_rows = _merge_microbench(idx, w)
     if not quick:  # at tiny quick-mode scale fixed overheads dominate
-        assert rows[0][1] > rows[-1][1], \
+        assert rows[0]["fused"]["qps"] > rows[-1]["fused"]["qps"], \
             f"throughput should drop with K: {rows}"
+    if out:
+        with open(out, "w") as f:
+            json.dump({"figure": "fig7_throughput",
+                       "quick": quick,
+                       "n_items": 4_000 if quick else C.N_ITEMS,
+                       "n_queries": len(w.queries),
+                       "rows": rows,
+                       "merge_microbench": merge_rows}, f, indent=2)
     return rows
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small dataset (CI-speed)")
+    ap.add_argument("--out", default="BENCH_fig7_throughput.json",
+                    help="write rows to this BENCH_*.json artifact")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out)

@@ -1,0 +1,297 @@
+"""ShardArena — the single canonical device form of a PyramidIndex.
+
+Every consumer of a built index (the single-host reference path, the
+threaded serving engine, the SPMD ``shard_map`` program) used to carry its
+own device representation: per-shard ``HNSWArrays`` uploads with per-shard
+jit compiles here, a stacked array pytree there. The arena unifies them:
+
+  * all w sub-HNSWs are stacked on a leading shard axis, equal-padded with
+    isolated nodes (all -1 neighbours, id -1, zero vector) that the walk
+    can never reach nor return;
+  * it is built ONCE per index (``PyramidIndex.arena()`` memoises) and
+    shared by every engine/executor/search path — one HBM copy, and one
+    jit compile for all shards because every shard view has equal shapes;
+  * ``arena_search`` is the fused route -> per-shard capacity-bounded beam
+    search (vmapped over the shard axis) -> dedup-top-k merge pipeline,
+    entirely on device, with the merge running as the ``merge_topk``
+    Pallas kernel.
+
+The per-stage helpers (``shard_search``, ``scatter_partials``) are the
+building blocks the SPMD path wraps in ``shard_map`` — the three search
+paths differ only in *where* the stages run, never in what they compute.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hnsw as H
+from repro.core.router import route_queries
+from repro.kernels.merge_topk import merge_topk
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class ShardArena:
+    """All w sub-HNSWs stacked on a leading shard axis.
+
+    Padding: graphs are padded to the max sub-dataset size with isolated
+    nodes (all -1 neighbours, id -1, zero vector) which can never be
+    reached by the walk nor returned (ids filtered by the merge).
+    """
+
+    data: jnp.ndarray     # [w, n_pad, d]
+    ids: jnp.ndarray      # [w, n_pad] (-1 pad)
+    bottom: jnp.ndarray   # [w, n_pad, M0]
+    upper: jnp.ndarray    # [w, L, n_pad, Mu]
+    entry: jnp.ndarray    # [w]
+    num_upper_levels: jnp.ndarray  # [w]
+
+    def __post_init__(self):
+        self._views: Dict[int, H.HNSWArrays] = {}
+
+    def tree_flatten(self):
+        return (self.data, self.ids, self.bottom, self.upper, self.entry,
+                self.num_upper_levels), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_shards(self) -> int:
+        return self.data.shape[0]
+
+    def shard(self, i) -> H.HNSWArrays:
+        """Uncached view of shard ``i`` (safe on traced values, e.g.
+        inside ``shard_map``/``vmap`` where ``i`` indexes local slots)."""
+        return H.HNSWArrays(
+            data=self.data[i], ids=self.ids[i], bottom=self.bottom[i],
+            upper=self.upper[i], entry=self.entry[i],
+            num_upper_levels=self.num_upper_levels[i])
+
+    def shard_view(self, i: int) -> H.HNSWArrays:
+        """Memoised concrete view of shard ``i``: every executor replica
+        serving the shard shares ONE set of device arrays (host-side use
+        only — never call with traced operands)."""
+        if i not in self._views:
+            self._views[i] = self.shard(i)
+        return self._views[i]
+
+    @classmethod
+    def from_index(cls, index) -> "ShardArena":
+        """Stack ``index.subs`` into one equal-padded device structure.
+
+        Builds the stacked buffers host-side straight from the
+        ``HNSWGraph`` fields (same layout as ``device_arrays``) so the
+        arena costs ONE device upload — no per-shard upload/download
+        round trip. Prefer ``index.arena()`` (memoised) over calling
+        this directly.
+        """
+        subs = index.subs
+        n_pad = max(g.n for g in subs)
+        l_pad = max(1, max(g.max_level for g in subs))
+        mu = max([lv.shape[1] for g in subs for lv in g.neighbors[1:]],
+                 default=1)
+        m0 = max(g.neighbors[0].shape[1] for g in subs)
+        d = subs[0].d
+        w = len(subs)
+
+        data = np.zeros((w, n_pad, d), np.float32)
+        ids = np.full((w, n_pad), -1, np.int32)
+        bottom = np.full((w, n_pad, m0), -1, np.int32)
+        upper = np.full((w, l_pad, n_pad, mu), -1, np.int32)
+        entry = np.zeros((w,), np.int32)
+        nul = np.zeros((w,), np.int32)
+        for i, g in enumerate(subs):
+            n = g.n
+            data[i, :n] = g.data
+            ids[i, :n] = g.ids
+            bottom[i, :n, : g.neighbors[0].shape[1]] = g.neighbors[0]
+            for lvl in range(1, g.max_level + 1):
+                lv = g.neighbors[lvl]
+                upper[i, lvl - 1, :n, : lv.shape[1]] = lv
+            entry[i] = int(g.entry)
+            nul[i] = int(g.max_level)
+        return cls(
+            data=jnp.asarray(data), ids=jnp.asarray(ids),
+            bottom=jnp.asarray(bottom), upper=jnp.asarray(upper),
+            entry=jnp.asarray(entry), num_upper_levels=jnp.asarray(nul))
+
+
+# ---------------------------------------------------------------------------
+# Fused pipeline stages (shared by arena_search and the SPMD wrapper)
+# ---------------------------------------------------------------------------
+
+
+def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
+                 *, metric: str, k: int, ef: int, capacity: int,
+                 max_iters: int = 400, shard_axis: str = "vmap"):
+    """Capacity-bounded beam search mapped over the shard axis.
+
+    Each shard drains its <= ``capacity`` assigned queries from ``mask``
+    (``jnp.nonzero(..., size=C)`` = static-shape queue draining; overflow
+    and empty slots point at the dummy row B and are invalidated).
+
+    Args:
+      arena: the shards to search — all of them (local slice inside SPMD).
+      mask: [B, w_arena] bool routing mask aligned with ``arena``.
+      queries: [B, d] preprocessed queries.
+      shard_axis: "vmap" batches the shard axis (right on TPU, where the
+        graph gathers stay one MXU/VPU-friendly program); "map" lowers it
+        to a sequential ``lax.map`` — XLA:CPU specialises gathers from a
+        2-D table far better than batched gathers from the stacked 3-D
+        table (~2x on the CPU reference path), and the per-shard loop is
+        sequential on one core anyway.
+
+    Returns (qidx [w, C] i32, ids [w, C, k] i32, scores [w, C, k] f32).
+    """
+    b = queries.shape[0]
+
+    def one_shard(data, ids_, bottom, upper, entry, nul, shard_mask):
+        g = H.HNSWArrays(data=data, ids=ids_, bottom=bottom, upper=upper,
+                         entry=entry, num_upper_levels=nul)
+        qidx = jnp.nonzero(shard_mask, size=capacity, fill_value=b)[0]
+        slot_valid = qidx < b
+        qs = queries[jnp.clip(qidx, 0, b - 1)]               # [C, d]
+        ids_out, scores_out = jax.vmap(lambda qv: H.search_one(
+            g, qv, metric=metric, k=k, ef=ef, max_iters=max_iters))(qs)
+        ids_out = jnp.where(slot_valid[:, None], ids_out, -1)
+        scores_out = jnp.where(slot_valid[:, None], scores_out, -jnp.inf)
+        return qidx.astype(jnp.int32), ids_out, scores_out
+
+    leaves = (arena.data, arena.ids, arena.bottom, arena.upper,
+              arena.entry, arena.num_upper_levels, mask.T)
+    if shard_axis == "map":
+        return jax.lax.map(lambda t: one_shard(*t), leaves)
+    return jax.vmap(one_shard)(*leaves)
+
+
+def scatter_partials(qidx: jnp.ndarray, ids: jnp.ndarray,
+                     scores: jnp.ndarray, b: int
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scatter per-shard partials back to query rows.
+
+    Args: qidx [w, C], ids [w, C, k], scores [w, C, k] (the dummy row b
+    absorbs invalid slots and is sliced off).
+    Returns (scores [B, w*k] f32, ids [B, w*k] i32) ready for the merge.
+    """
+    w, _, k = ids.shape
+    out_s = jnp.full((b + 1, w, k), -jnp.inf, jnp.float32)
+    out_i = jnp.full((b + 1, w, k), -1, jnp.int32)
+    shard_col = jnp.arange(w)[:, None]          # broadcast against [w, C]
+    out_s = out_s.at[qidx, shard_col].set(scores)
+    out_i = out_i.at[qidx, shard_col].set(ids)
+    return out_s[:b].reshape(b, w * k), out_i[:b].reshape(b, w * k)
+
+
+def _search_scatter_merge(arena: ShardArena, mask: jnp.ndarray,
+                          queries: jnp.ndarray, *, metric: str, k: int,
+                          ef: int, capacity: int, max_iters: int,
+                          use_kernel: bool, shard_axis: str):
+    """The shared post-routing pipeline body: shard_search -> scatter ->
+    dedup merge. Both jitted entry points delegate here."""
+    b = queries.shape[0]
+    qidx, ids, scores = shard_search(
+        arena, mask, queries, metric=metric, k=k, ef=ef,
+        capacity=capacity, max_iters=max_iters, shard_axis=shard_axis)
+    flat_s, flat_i = scatter_partials(qidx, ids, scores, b)
+    top_s, top_i = merge_topk(flat_s, flat_i, k=k, use_kernel=use_kernel)
+    return top_i, top_s
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "k", "ef", "branching_factor", "capacity", "max_iters",
+    "naive", "use_kernel", "shard_axis"))
+def _fused_routed(arena: ShardArena, meta: H.HNSWArrays,
+                  part_of_center: jnp.ndarray, queries: jnp.ndarray, *,
+                  metric: str, k: int, ef: int, branching_factor: int,
+                  capacity: int, max_iters: int, naive: bool,
+                  use_kernel: bool, shard_axis: str):
+    """route -> shard_search -> scatter -> merge, one jitted program."""
+    b = queries.shape[0]
+    w = arena.data.shape[0]
+    if naive:
+        mask = jnp.ones((b, w), dtype=jnp.bool_)
+    else:
+        mask, _ = route_queries.__wrapped__(
+            meta, part_of_center, queries, metric=metric,
+            branching_factor=branching_factor, num_shards=w,
+            ef=max(64, branching_factor))
+    top_i, top_s = _search_scatter_merge(
+        arena, mask, queries, metric=metric, k=k, ef=ef,
+        capacity=capacity, max_iters=max_iters, use_kernel=use_kernel,
+        shard_axis=shard_axis)
+    return top_i, top_s, mask
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "metric", "k", "ef", "capacity", "max_iters", "use_kernel",
+    "shard_axis"))
+def _fused_masked(arena: ShardArena, mask: jnp.ndarray,
+                  queries: jnp.ndarray, *, metric: str, k: int, ef: int,
+                  capacity: int, max_iters: int, use_kernel: bool,
+                  shard_axis: str):
+    """shard_search -> scatter -> merge with a caller-provided mask."""
+    return _search_scatter_merge(
+        arena, mask, queries, metric=metric, k=k, ef=ef,
+        capacity=capacity, max_iters=max_iters, use_kernel=use_kernel,
+        shard_axis=shard_axis)
+
+
+def arena_search(arena: ShardArena, meta: H.HNSWArrays,
+                 part_of_center: jnp.ndarray, queries: jnp.ndarray, *,
+                 metric: str, k: int, ef: int = 100,
+                 branching_factor: int = 4,
+                 capacity: Optional[int] = None,
+                 capacity_factor: float = 2.0, max_iters: int = 400,
+                 naive: bool = False, use_kernel: bool = True,
+                 mask: Optional[jnp.ndarray] = None,
+                 shard_axis: Optional[str] = None):
+    """Fused distributed search over a device-resident arena (Alg. 4).
+
+    Routes through the replicated meta-HNSW, beam-searches the <= K
+    routed shards per query under a per-shard capacity bound, and merges
+    partials with the dedup-top-k kernel — one jitted program, no host
+    round-trips between the stages.
+
+    Args:
+      queries: [B, d] *preprocessed* queries (see ``M.preprocess_queries``).
+      capacity: per-shard query slots; defaults to
+        ``ceil(B * K / w * capacity_factor)`` (B when ``naive``) — the
+        paper's throughput mechanism realised as a FLOP bound.
+      naive: search every shard (the HNSW-naive baseline of Sec. III).
+      mask: optional precomputed [B, w] routing mask; skips the routing
+        stage (the reference path uses this to guarantee zero drops).
+      shard_axis: "vmap" | "map" shard-axis strategy (see
+        :func:`shard_search`); default "map" on CPU, "vmap" elsewhere.
+
+    Returns (ids [B, k] i32, scores [B, k] f32, mask [B, w] bool).
+    """
+    b = queries.shape[0]
+    w = arena.num_shards
+    if shard_axis is None:
+        shard_axis = "map" if jax.default_backend() == "cpu" else "vmap"
+    if capacity is None:
+        if naive:
+            capacity = b
+        else:
+            capacity = int(np.ceil(
+                b * branching_factor / w * capacity_factor))
+    capacity = max(1, min(b, int(capacity)))
+    if mask is not None:
+        ids, scores = _fused_masked(
+            arena, jnp.asarray(mask), queries, metric=metric, k=k, ef=ef,
+            capacity=capacity, max_iters=max_iters, use_kernel=use_kernel,
+            shard_axis=shard_axis)
+        return ids, scores, mask
+    return _fused_routed(
+        arena, meta, part_of_center, queries, metric=metric, k=k, ef=ef,
+        branching_factor=branching_factor, capacity=capacity,
+        max_iters=max_iters, naive=naive, use_kernel=use_kernel,
+        shard_axis=shard_axis)

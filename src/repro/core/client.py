@@ -51,6 +51,15 @@ class EngineShutdownError(RuntimeError):
     """The engine serving this future was shut down before it completed."""
 
 
+class QueryExpiredError(RuntimeError):
+    """The engine gave up on this query: it sat in ``_pending`` past the
+    engine's ``pending_deadline_s`` (e.g. its shard lost every live
+    replica, so the missing partials can never arrive). Unlike the
+    builtin ``TimeoutError`` from ``SearchFuture.result(timeout)`` —
+    after which the query keeps running — an expired query is dropped by
+    the engine and its future can never complete."""
+
+
 class SearchFuture:
     """Handle for one in-flight query.
 

@@ -3,24 +3,30 @@
 The paper's Kafka topic-per-sub-HNSW dispatch becomes capacity-bounded
 dispatch over the ``model`` mesh axis (DESIGN.md §3):
 
-  * the w sub-HNSWs are stacked into equal-padded arrays and sharded over
-    ``model`` (each device owns w / |model| shards);
-  * every device routes the (replicated) query batch through the replicated
-    meta-HNSW, picks the <= C queries assigned to *its* shards
+  * the w sub-HNSWs live in ONE device-resident :class:`ShardArena`
+    (``repro.core.arena``), sharded over ``model`` (each device owns
+    w / |model| shards);
+  * every device routes the (replicated) query batch through the
+    replicated meta-HNSW, picks the <= C queries assigned to *its* shards
     (``jnp.nonzero(..., size=C)`` = static-shape queue draining), searches
     its local sub-HNSWs, and
-  * partial results are combined with an ``all_gather`` + scatter + top-k —
-    the coordinator merge of Alg. 4 line 9.
+  * partial results are combined with an ``all_gather`` + scatter +
+    ``merge_topk`` dedup merge — the coordinator merge of Alg. 4 line 9.
 
 Per-shard work drops from B queries (HNSW-naive) to C ≈ B·K/w — the paper's
 throughput mechanism, realised as a FLOP reduction instead of queue load.
 
-``search_single_host`` is the pure-numpy/JAX reference used by tests and
-CPU benchmarks; the SPMD path is validated against it.
+All three search paths (this SPMD program, ``search_single_host``, the
+serving engine) are thin orchestrations of the same arena building blocks
+— ``shard_search`` / ``scatter_partials`` / ``merge_topk`` — so they
+cannot drift apart in merge or dedup semantics. ``search_single_host`` is
+the single-host entry point used by tests, examples and CPU benchmarks;
+``search_single_host_python`` preserves the pre-arena per-shard Python
+loop as an independent oracle (and the "before" side of the fused-merge
+microbench in ``benchmarks/fig7_throughput.py``).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import jax
@@ -33,94 +39,94 @@ from repro.common.jax_compat import shard_map
 from repro.common.config import PyramidConfig
 from repro.core import hnsw as H
 from repro.core import metrics as M
+from repro.core.arena import (ShardArena, arena_search, scatter_partials,
+                              shard_search)
 from repro.core.meta_index import PyramidIndex
 from repro.core.router import route_queries
+from repro.kernels.merge_topk import merge_topk
+
+# Back-compat aliases: StackedShards was promoted to
+# ``repro.core.arena.ShardArena`` (same pytree layout and field order).
+StackedShards = ShardArena
+
+
+def stack_shards(index: PyramidIndex) -> ShardArena:
+    """Deprecated alias for ``index.arena()`` (memoised; prefer that)."""
+    return index.arena()
 
 
 # ---------------------------------------------------------------------------
-# Stacked shard arrays (equal-padded, shardable over the model axis)
+# Single-host path (fused arena pipeline)
 # ---------------------------------------------------------------------------
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class StackedShards:
-    """All w sub-HNSWs stacked on a leading shard axis.
-
-    Padding: graphs are padded to the max sub-dataset size with isolated
-    nodes (all -1 neighbours, id -1, zero vector) which can never be reached
-    by the walk nor returned (ids filtered downstream).
-    """
-
-    data: jnp.ndarray     # [w, n_pad, d]
-    ids: jnp.ndarray      # [w, n_pad] (-1 pad)
-    bottom: jnp.ndarray   # [w, n_pad, M0]
-    upper: jnp.ndarray    # [w, L, n_pad, Mu]
-    entry: jnp.ndarray    # [w]
-    num_upper_levels: jnp.ndarray  # [w]
-
-    def tree_flatten(self):
-        return (self.data, self.ids, self.bottom, self.upper, self.entry,
-                self.num_upper_levels), None
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(*children)
-
-    @property
-    def num_shards(self) -> int:
-        return self.data.shape[0]
-
-    def shard(self, i: int) -> H.HNSWArrays:
-        return H.HNSWArrays(
-            data=self.data[i], ids=self.ids[i], bottom=self.bottom[i],
-            upper=self.upper[i], entry=self.entry[i],
-            num_upper_levels=self.num_upper_levels[i])
-
-
-def stack_shards(index: PyramidIndex) -> StackedShards:
-    arrs = [g.device_arrays() for g in index.subs]
-    n_pad = max(a.data.shape[0] for a in arrs)
-    l_pad = max(a.upper.shape[0] for a in arrs)
-    mu = max(a.upper.shape[2] for a in arrs)
-    m0 = max(a.bottom.shape[1] for a in arrs)
-    d = arrs[0].data.shape[1]
-    w = len(arrs)
-
-    data = np.zeros((w, n_pad, d), np.float32)
-    ids = np.full((w, n_pad), -1, np.int32)
-    bottom = np.full((w, n_pad, m0), -1, np.int32)
-    upper = np.full((w, l_pad, n_pad, mu), -1, np.int32)
-    entry = np.zeros((w,), np.int32)
-    nul = np.zeros((w,), np.int32)
-    for i, a in enumerate(arrs):
-        n = a.data.shape[0]
-        data[i, :n] = np.asarray(a.data)
-        ids[i, :n] = np.asarray(a.ids)
-        bottom[i, :n, : a.bottom.shape[1]] = np.asarray(a.bottom)
-        up = np.asarray(a.upper)
-        upper[i, : up.shape[0], :n, : up.shape[2]] = up
-        entry[i] = int(a.entry)
-        nul[i] = int(a.num_upper_levels)
-    return StackedShards(
-        data=jnp.asarray(data), ids=jnp.asarray(ids),
-        bottom=jnp.asarray(bottom), upper=jnp.asarray(upper),
-        entry=jnp.asarray(entry), num_upper_levels=jnp.asarray(nul))
-
-
-# ---------------------------------------------------------------------------
-# Reference path (single host, python loop over shards)
-# ---------------------------------------------------------------------------
+def _pow2(n: int) -> int:
+    return 1 << (max(1, int(n)) - 1).bit_length()
 
 
 def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
                        ef: Optional[int] = None,
                        branching_factor: Optional[int] = None,
                        naive: bool = False):
-    """Alg. 4 reference implementation.
+    """Alg. 4 single-host entry point, on the fused arena pipeline.
+
+    Routes on device, then runs ``arena_search`` with a precomputed mask
+    and capacity = the *actual* max per-shard load — exact reference
+    semantics (no capacity drops) while still bounding per-shard work.
+    The batch is padded to a power of two and the capacity to a multiple
+    of 32 (tighter: capacity overshoot multiplies by w shards) so
+    repeated calls with varying routing fan-out reuse the jit cache.
 
     naive=True searches every shard (the HNSW-naive baseline of Sec. III).
     Returns (ids [B, k], scores [B, k], mask [B, w]).
+    """
+    cfg = index.config
+    ef = ef or cfg.ef_search
+    kb = branching_factor or cfg.branching_factor
+    metric = "ip" if cfg.is_mips else cfg.metric
+    q = M.preprocess_queries(queries, cfg.metric)
+    b = q.shape[0]
+    w = index.num_shards
+    arena = index.arena()
+
+    if naive:
+        mask = np.ones((b, w), dtype=bool)
+    else:
+        mask_j, _ = route_queries(
+            index.meta_arrays(), jnp.asarray(index.part_of_center),
+            jnp.asarray(q), metric=metric, branching_factor=kb,
+            num_shards=w, ef=max(64, kb))
+        mask = np.asarray(mask_j)
+
+    bp = _pow2(b)
+    qp = q
+    mp = mask
+    if bp > b:   # pad with the first query, routed nowhere
+        qp = np.concatenate([q, np.repeat(q[:1], bp - b, axis=0)])
+        mp = np.concatenate(
+            [mask, np.zeros((bp - b, w), dtype=bool)])
+    max_load = int(mp.sum(axis=0).max())
+    capacity = min(bp, max(32, -(-max_load // 32) * 32))
+
+    ids, scores, _ = arena_search(
+        arena, None, None, jnp.asarray(qp), metric=metric, k=k, ef=ef,
+        capacity=capacity, mask=jnp.asarray(mp))
+    return (np.asarray(ids)[:b].astype(np.int64),
+            np.asarray(scores)[:b], mask)
+
+
+def search_single_host_python(index: PyramidIndex, queries: np.ndarray,
+                              k: int, *, ef: Optional[int] = None,
+                              branching_factor: Optional[int] = None,
+                              naive: bool = False):
+    """Pre-arena reference: per-shard Python loop + host heap-free merge.
+
+    Kept as an independent oracle for the fused pipeline (parity tests)
+    and as the "before" baseline of the fig7 merge microbench, so it
+    reproduces the pre-arena cost profile faithfully: each shard is
+    uploaded as its own [n_i]-shaped ``device_arrays()`` per call (no
+    shared arena, per-shard jit shapes). Same return contract as
+    :func:`search_single_host`.
     """
     cfg = index.config
     ef = ef or cfg.ef_search
@@ -145,11 +151,9 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
         sel = np.where(mask[:, s])[0]
         if sel.size == 0:
             continue
-        arrs = index.sub_arrays(s)
+        arrs = index.subs[s].device_arrays()   # pre-arena: private upload
         kk = min(k, index.subs[s].n)
-        # pad the per-shard batch to the next power of two so repeated
-        # calls with varying routing fan-out reuse the jit cache
-        padded = 1 << (int(sel.size) - 1).bit_length()
+        padded = _pow2(sel.size)   # pad for jit-cache reuse across fan-outs
         qs = q[sel]
         if padded > sel.size:
             qs = np.concatenate(
@@ -159,9 +163,20 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
         all_ids[sel, s, :kk] = np.asarray(ids)[: sel.size]
         all_scores[sel, s, :kk] = np.asarray(scores)[: sel.size]
 
-    flat_scores = all_scores.reshape(b, -1)
-    flat_ids = all_ids.reshape(b, -1)
-    # dedupe replicated ids (MIPS replication may return one item twice)
+    out_ids, out_scores = python_loop_merge(
+        all_scores.reshape(b, -1), all_ids.reshape(b, -1), k)
+    return out_ids, out_scores, mask
+
+
+def python_loop_merge(flat_scores: np.ndarray, flat_ids: np.ndarray,
+                      k: int):
+    """The pre-arena per-query Python dedup merge (argsort + ``set``).
+
+    Kept verbatim as the "before" side of the merge microbench — the
+    fused pipeline replaces it with the ``merge_topk`` kernel.
+    Dedupes replicated ids (MIPS replication may return one item twice).
+    """
+    b = flat_scores.shape[0]
     order = np.argsort(-flat_scores, axis=1)
     out_ids = np.full((b, k), -1, np.int64)
     out_scores = np.full((b, k), -np.inf, np.float32)
@@ -178,28 +193,12 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
             j += 1
             if j == k:
                 break
-    return out_ids, out_scores, mask
+    return out_ids, out_scores
 
 
 # ---------------------------------------------------------------------------
-# SPMD path (shard_map over the model axis)
+# SPMD path (thin shard_map wrapper over the arena building blocks)
 # ---------------------------------------------------------------------------
-
-
-def _local_search(g: H.HNSWArrays, q: jnp.ndarray, metric: str, k: int,
-                  ef: int, max_iters: int):
-    """hnsw_search without the jit wrapper (already inside shard_map)."""
-
-    def one(qv):
-        entry = H._greedy_descend(g, qv, metric, max_steps=64)
-        scores, nodes = H._beam_search_bottom(g, qv, entry, metric, ef,
-                                              max_iters)
-        top_scores, idx = jax.lax.top_k(scores, k)
-        nds = nodes[idx]
-        ext = jnp.where(nds >= 0, g.ids[jnp.clip(nds, 0)], -1)
-        return ext, top_scores
-
-    return jax.vmap(one)(q)
 
 
 def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
@@ -210,9 +209,9 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
     """Builds the jitted SPMD search step for a given mesh.
 
     The returned fn has signature
-      fn(stacked: StackedShards, meta: HNSWArrays, part_of_center [m],
+      fn(arena: ShardArena, meta: HNSWArrays, part_of_center [m],
          queries [B, d]) -> (ids [B, k], scores [B, k])
-    with ``stacked`` sharded over ``model`` on its leading (shard) axis and
+    with ``arena`` sharded over ``model`` on its leading (shard) axis and
     meta replicated. Capacity C = ceil(B * K / w * capacity_factor)
     (C = B for the naive baseline).
 
@@ -233,61 +232,42 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
             batch * cfg.branching_factor / w * cfg.capacity_factor))
         capacity = max(1, min(batch, capacity))
 
-    def spmd(stacked: StackedShards, meta: H.HNSWArrays,
+    def spmd(arena: ShardArena, meta: H.HNSWArrays,
              part_of_center: jnp.ndarray, queries: jnp.ndarray):
         my = jax.lax.axis_index(model_axis)
+        b = queries.shape[0]
 
         if naive:
-            mask = jnp.ones((queries.shape[0], w), dtype=jnp.bool_)
+            mask = jnp.ones((b, w), dtype=jnp.bool_)
         else:
             mask, _ = route_queries.__wrapped__(
                 meta, part_of_center, queries, metric=metric,
                 branching_factor=cfg.branching_factor, num_shards=w,
                 ef=max(64, cfg.branching_factor))
 
-        b = queries.shape[0]
+        # per-shard search on this device's local slice of the arena
+        local_mask = jax.lax.dynamic_slice_in_dim(
+            mask, my * w_local, w_local, axis=1)
+        qidx, ids, scores = shard_search(
+            arena, local_mask, queries, metric=metric, k=k,
+            ef=max(ef, k), capacity=capacity, max_iters=max_iters)
 
-        def one_shard(shard_slot: int):
-            g = stacked.shard(shard_slot)
-            global_shard = my * w_local + shard_slot
-            q_mask = mask[:, global_shard]                       # [B]
-            # static-size queue drain: indices of assigned queries; overflow
-            # and empty slots point at the dummy row b (sliced off below).
-            qidx = jnp.nonzero(q_mask, size=capacity, fill_value=b)[0]
-            slot_valid = qidx < b
-            qs = queries[jnp.clip(qidx, 0, b - 1)]               # [C, d]
-            ids, scores = _local_search(g, qs, metric, k,
-                                        max(ef, k), max_iters)
-            ids = jnp.where(slot_valid[:, None], ids, -1)
-            scores = jnp.where(slot_valid[:, None], scores, -jnp.inf)
-            return qidx, ids, scores
-
-        per = [one_shard(s) for s in range(w_local)]
-        qidx = jnp.stack([p[0] for p in per])       # [w_local, C]
-        ids = jnp.stack([p[1] for p in per])        # [w_local, C, k]
-        scores = jnp.stack([p[2] for p in per])     # [w_local, C, k]
-
-        # coordinator merge: gather partials from all shards
+        # coordinator merge: gather partials from all shards, then the
+        # same scatter + dedup merge as the fused single-host pipeline
+        # (jnp oracle: the interpret-mode kernel cannot run in shard_map)
         qidx = jax.lax.all_gather(qidx, model_axis, tiled=True)    # [w, C]
-        ids = jax.lax.all_gather(ids, model_axis, tiled=True)      # [w, C, k]
+        ids = jax.lax.all_gather(ids, model_axis, tiled=True)  # [w, C, k]
         scores = jax.lax.all_gather(scores, model_axis, tiled=True)
-
-        # dummy row b absorbs invalid slots; sliced off before the merge
-        out_scores = jnp.full((b + 1, w * k), -jnp.inf, jnp.float32)
-        out_ids = jnp.full((b + 1, w * k), -1, jnp.int32)
-        for s in range(w):
-            col = slice(s * k, (s + 1) * k)
-            out_scores = out_scores.at[qidx[s], col].set(scores[s])
-            out_ids = out_ids.at[qidx[s], col].set(ids[s])
-        top_scores, sel = jax.lax.top_k(out_scores[:b], k)
-        top_ids = jnp.take_along_axis(out_ids[:b], sel, axis=1)
+        flat_s, flat_i = scatter_partials(qidx, ids, scores, b)
+        top_scores, top_ids = merge_topk(flat_s, flat_i, k=k,
+                                         use_kernel=False)
         return top_ids, top_scores
 
     qspec = P(data_axis) if data_axis else P()
     fn = shard_map(
         spmd, mesh=mesh,
         in_specs=(
-            StackedShards(
+            ShardArena(
                 data=P(model_axis), ids=P(model_axis),
                 bottom=P(model_axis), upper=P(model_axis),
                 entry=P(model_axis), num_upper_levels=P(model_axis)),

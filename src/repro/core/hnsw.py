@@ -385,6 +385,32 @@ def _beam_search_bottom(g: HNSWArrays, q: jnp.ndarray, entry: jnp.ndarray,
     return beam_scores, beam_ids
 
 
+def search_one(g: HNSWArrays, q: jnp.ndarray, *, metric: str, k: int,
+               ef: int, max_iters: int = 400, max_steps: int = 64):
+    """One query against one graph: greedy descend through the upper
+    layers, bottom-layer beam search, top-k, node -> external-id
+    translation, (-1, -inf) padding when the graph is smaller than k.
+
+    This is THE per-query search core — ``hnsw_search`` (engine path) and
+    the fused arena pipeline (``repro.core.arena.shard_search``) both
+    call it, so their semantics cannot drift. Trace-time only (call
+    under jit/vmap). Returns (ids [k] i32, scores [k] f32) best-first.
+    """
+    ef = max(ef, k)
+    entry = _greedy_descend(g, q, metric, max_steps=max_steps)
+    scores, nodes = _beam_search_bottom(g, q, entry, metric, ef, max_iters)
+    kk = min(k, scores.shape[0])
+    top_scores, idx = jax.lax.top_k(scores, kk)
+    top_nodes = nodes[idx]
+    ext = jnp.where(top_nodes >= 0, g.ids[jnp.clip(top_nodes, 0)], -1)
+    if kk < k:  # graph smaller than k: pad
+        pad = k - kk
+        ext = jnp.concatenate([ext, jnp.full((pad,), -1, jnp.int32)])
+        top_scores = jnp.concatenate(
+            [top_scores, jnp.full((pad,), -jnp.inf, jnp.float32)])
+    return ext, top_scores
+
+
 @partial(jax.jit, static_argnames=("metric", "k", "ef", "max_iters"))
 def hnsw_search(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
                 k: int, ef: int = 100, max_iters: int = 400):
@@ -400,23 +426,8 @@ def hnsw_search(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
     Returns:
       (ids [B, k] int32 external ids (-1 pad), scores [B, k] f32) best-first.
     """
-    ef = max(ef, k)
-
-    def one(q):
-        entry = _greedy_descend(g, q, metric, max_steps=64)
-        scores, nodes = _beam_search_bottom(g, q, entry, metric, ef, max_iters)
-        kk = min(k, scores.shape[0])
-        top_scores, idx = jax.lax.top_k(scores, kk)
-        top_nodes = nodes[idx]
-        ext = jnp.where(top_nodes >= 0, g.ids[jnp.clip(top_nodes, 0)], -1)
-        if kk < k:  # graph smaller than k: pad
-            pad = k - kk
-            ext = jnp.concatenate([ext, jnp.full((pad,), -1, jnp.int32)])
-            top_scores = jnp.concatenate(
-                [top_scores, jnp.full((pad,), -jnp.inf, jnp.float32)])
-        return ext, top_scores
-
-    return jax.vmap(one)(queries)
+    return jax.vmap(lambda q: search_one(
+        g, q, metric=metric, k=k, ef=ef, max_iters=max_iters))(queries)
 
 
 def search_numpy(graph: HNSWGraph, queries: np.ndarray, k: int,

@@ -36,11 +36,43 @@ class PyramidIndex:
     def num_shards(self) -> int:
         return len(self.subs)
 
+    def arena(self):
+        """The canonical device form (``repro.core.arena.ShardArena``),
+        built once and shared by every consumer — engines, the reference
+        search path and the SPMD program all read these same arrays."""
+        if getattr(self, "_arena", None) is None:
+            from repro.core.arena import ShardArena
+            self._arena = ShardArena.from_index(self)
+        return self._arena
+
     def meta_arrays(self) -> H.HNSWArrays:
-        return self.meta.device_arrays()
+        if getattr(self, "_meta_arrays", None) is None:
+            self._meta_arrays = self.meta.device_arrays()
+        return self._meta_arrays
 
     def sub_arrays(self, i: int) -> H.HNSWArrays:
-        return self.subs[i].device_arrays()
+        """Device view of shard ``i`` — a slice of the shared arena.
+
+        Migration note: this used to upload a private per-shard copy
+        (shape [n_i, ...]); it now returns the arena's equal-padded view
+        (shape [n_pad, ...], isolated pad nodes). Searches behave
+        identically; code that relied on ``data.shape[0] == subs[i].n``
+        should read ``subs[i].n`` instead.
+        """
+        return self.arena().shard_view(i)
+
+    def invalidate_device_cache(self) -> None:
+        """Drop memoised device arrays after an in-place mutation of
+        ``subs``/``meta`` (see ``repro.core.updates``)."""
+        self._arena = None
+        self._meta_arrays = None
+
+    def __getstate__(self):
+        # device caches are derived data: never pickled (save_index)
+        state = dict(self.__dict__)
+        state.pop("_arena", None)
+        state.pop("_meta_arrays", None)
+        return state
 
 
 def _sample(x: np.ndarray, n_sample: int, rng) -> np.ndarray:

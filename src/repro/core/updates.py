@@ -56,6 +56,7 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
             ids=ids)
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
+    index.invalidate_device_cache()   # subs changed: arena must rebuild
     return index
 
 
@@ -78,4 +79,5 @@ def remove_items(index: PyramidIndex, remove_ids: np.ndarray
             ids=old.ids[keep])
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
+    index.invalidate_device_cache()   # subs changed: arena must rebuild
     return index

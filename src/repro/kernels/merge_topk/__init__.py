@@ -1,0 +1,4 @@
+from repro.kernels.merge_topk.ops import merge_impl, merge_topk
+from repro.kernels.merge_topk.ref import merge_topk_np, merge_topk_ref
+
+__all__ = ["merge_impl", "merge_topk", "merge_topk_np", "merge_topk_ref"]

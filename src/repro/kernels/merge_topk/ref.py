@@ -1,0 +1,82 @@
+"""References for the dedup-top-k merge: pure-jnp oracle + numpy twin.
+
+The merge is Alg. 4 line 9 (coordinator combine): given per-query partial
+result lists flattened to ``[B, m]`` (scores, external ids), return the k
+best entries per query with *duplicate external ids removed* — MIPS
+norm-replication (Alg. 5) stores one item in several sub-datasets, so two
+shards can legitimately return the same global id.
+
+Semantics shared by every implementation (kernel / jnp / numpy):
+  * ids < 0 are padding and never returned;
+  * of a duplicate-id group only the best-scoring occurrence survives
+    (score ties break to the lowest input position, so the merge is
+    deterministic);
+  * output is sorted descending, padded with (-inf, -1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dominated(scores: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """[B, m] -> [B, m] bool: entry j loses to a better same-id entry i."""
+    m = ids.shape[1]
+    eq = ids[:, :, None] == ids[:, None, :]                   # [B, i, j]
+    ii = jax.lax.broadcasted_iota(jnp.int32, (m, m), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (m, m), 1)
+    beats = jnp.logical_or(
+        scores[:, :, None] > scores[:, None, :],
+        jnp.logical_and(scores[:, :, None] == scores[:, None, :],
+                        (ii < jj)[None]))
+    valid_i = (ids >= 0)[:, :, None]
+    return jnp.any(eq & beats & valid_i, axis=1)
+
+
+def merge_topk_ref(scores: jnp.ndarray, ids: jnp.ndarray, *, k: int):
+    """Dedup top-k merge oracle.
+
+    Args:
+      scores: [B, m] f32, -inf for empty slots.
+      ids: [B, m] int external ids, -1 for empty slots.
+      k: entries to keep (k <= m; ``ops.merge_topk`` pads otherwise).
+
+    Returns:
+      (scores [B, k] f32 descending, ids [B, k] i32), (-inf, -1) padded.
+    """
+    s = jnp.where(ids >= 0, scores.astype(jnp.float32), -jnp.inf)
+    s = jnp.where(_dominated(s, ids), -jnp.inf, s)
+    top_s, sel = jax.lax.top_k(s, k)
+    top_i = jnp.take_along_axis(ids.astype(jnp.int32), sel, axis=1)
+    top_i = jnp.where(top_s > -jnp.inf, top_i, -1)
+    return top_s, top_i
+
+
+def merge_topk_np(scores: np.ndarray, ids: np.ndarray, *, k: int):
+    """Numpy twin of :func:`merge_topk_ref` for host-side merging (the
+    serving engine's coordinator thread merges tiny per-query partial
+    lists; a jit round-trip per query would cost more than the merge).
+
+    Returns (scores [B, k] f32 descending, ids [B, k] int64) — the same
+    tuple order as every other ``merge_topk`` implementation.
+    """
+    scores = np.asarray(scores, np.float32)
+    ids = np.asarray(ids, np.int64)
+    b, m = scores.shape
+    s = np.where(ids >= 0, scores, -np.inf)
+    eq = ids[:, :, None] == ids[:, None, :]
+    beats = (s[:, :, None] > s[:, None, :]) | (
+        (s[:, :, None] == s[:, None, :]) &
+        (np.arange(m)[:, None] < np.arange(m)[None, :]))
+    dominated = np.any(eq & beats & (ids >= 0)[:, :, None], axis=1)
+    s = np.where(dominated, -np.inf, s)
+    kk = min(k, m)
+    order = np.argsort(-s, axis=1, kind="stable")[:, :kk]
+    out_ids = np.full((b, k), -1, np.int64)
+    out_scores = np.full((b, k), -np.inf, np.float32)
+    out_scores[:, :kk] = np.take_along_axis(s, order, axis=1)
+    out_ids[:, :kk] = np.take_along_axis(ids, order, axis=1)
+    out_ids[:, :kk] = np.where(out_scores[:, :kk] > -np.inf,
+                               out_ids[:, :kk], -1)
+    return out_scores, out_ids

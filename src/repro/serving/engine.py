@@ -37,9 +37,12 @@ import numpy as np
 from repro.common.config import PyramidConfig
 from repro.core import hnsw as H
 from repro.core import metrics as M
-from repro.core.client import EngineShutdownError, SearchFuture
+from repro.core.arena import ShardArena
+from repro.core.client import (EngineShutdownError, QueryExpiredError,
+                               SearchFuture)
 from repro.core.meta_index import PyramidIndex
 from repro.core.router import route_queries
+from repro.kernels.merge_topk import merge_topk_np
 
 
 @dataclasses.dataclass
@@ -70,13 +73,17 @@ class Executor(threading.Thread):
     """Serves one sub-HNSW replica; pulls from its topic queue."""
 
     def __init__(self, name: str, topic: "queue.Queue", shard_id: int,
-                 graph_arrays: H.HNSWArrays, metric: str, ef: int,
+                 arena: ShardArena, metric: str, ef: int,
                  result_bus: "queue.Queue", heartbeat: Dict[str, float],
                  batch_max: int = 32, warm_k: int = 10):
         super().__init__(name=name, daemon=True)
         self.topic = topic
         self.shard_id = shard_id
-        self.graph = graph_arrays
+        self.arena = arena
+        # shared memoised view: every replica of every shard reads the
+        # one engine-wide arena (equal shapes => one jit compile serves
+        # all executors; one HBM copy per engine, not per executor)
+        self.graph = arena.shard_view(shard_id)
         self.metric = metric
         self.ef = ef
         self.result_bus = result_bus
@@ -91,8 +98,18 @@ class Executor(threading.Thread):
         self.alive = False
 
     def _search(self, batch):
-        """Fixed-size padded search: one jit compilation per executor."""
-        k = batch[0].k
+        """Fixed-size padded search, engine-wide jit cache (arena views
+        share shapes across shards).
+
+        A drained batch may mix requests with different ``k``: search
+        once at ``max(k)`` — rounded up to a power of two so arbitrary
+        caller k values cannot trigger unbounded mid-serving jit
+        compiles — and trim per request, so mixed-k callers sharing the
+        engine each get their own result width.
+        Returns ``[(ids [r.k], scores [r.k]) for r in batch]``.
+        """
+        k = max(r.k for r in batch)
+        k = 1 << (k - 1).bit_length()   # bucket: log-many compiles total
         vecs = np.stack([r.vector for r in batch])
         if len(batch) < self.batch_max:  # pad to the compiled shape
             pad = np.repeat(vecs[:1], self.batch_max - len(batch), axis=0)
@@ -100,8 +117,10 @@ class Executor(threading.Thread):
         ids, scores = H.hnsw_search(
             self.graph, jnp.asarray(vecs), metric=self.metric, k=k,
             ef=self.ef)
-        return np.asarray(ids)[: len(batch)], \
-            np.asarray(scores)[: len(batch)]
+        ids = np.asarray(ids)
+        scores = np.asarray(scores)
+        return [(ids[i, : r.k], scores[i, : r.k])
+                for i, r in enumerate(batch)]
 
     def run(self) -> None:
         # warm up the jit cache before claiming work
@@ -129,13 +148,13 @@ class Executor(threading.Thread):
                     self.topic.put(r)
                 return
             t0 = time.monotonic()
-            ids, scores = self._search(batch)
+            outs = self._search(batch)
             dt = time.monotonic() - t0
             if self.cpu_share < 1.0:  # CPU-limit tool analogue
                 time.sleep(dt * (1.0 / self.cpu_share - 1.0))
-            for i, r in enumerate(batch):
-                self.result_bus.put(PartialResult(r.query_id, ids[i],
-                                                  scores[i]))
+            for r, (ids_r, scores_r) in zip(batch, outs):
+                self.result_bus.put(
+                    PartialResult(r.query_id, ids_r, scores_r))
             self.processed += len(batch)
 
 
@@ -169,7 +188,8 @@ class ServingEngine:
 
     def __init__(self, index: PyramidIndex, *, replicas: int = 1,
                  ef: Optional[int] = None, auto_restart: bool = True,
-                 executor_batch: int = 16, warm_k: int = 10):
+                 executor_batch: int = 16, warm_k: int = 10,
+                 pending_deadline_s: Optional[float] = 300.0):
         self.index = index
         self.cfg = index.config
         self.metric = "ip" if self.cfg.is_mips else self.cfg.metric
@@ -178,10 +198,15 @@ class ServingEngine:
         self.auto_restart = auto_restart
         self.executor_batch = executor_batch
         self.warm_k = warm_k
+        # a pending query whose shard lost every live replica would leak
+        # forever (its partials can never arrive); after this deadline it
+        # is failed with QueryExpiredError. None disables expiry.
+        self.pending_deadline_s = pending_deadline_s
+        self.expired = 0
 
         self.meta_arrays = index.meta_arrays()
         self.part_of_center = jnp.asarray(index.part_of_center)
-        self.sub_arrays = [index.sub_arrays(i) for i in range(self.w)]
+        self.arena = index.arena()   # one device arena per engine
 
         self.topics: List[queue.Queue] = [queue.Queue()
                                           for _ in range(self.w)]
@@ -210,7 +235,7 @@ class ServingEngine:
     def _spawn(self, shard: int, replica: int) -> Executor:
         name = f"exec-s{shard}-r{replica}"
         ex = Executor(name, self.topics[shard], shard,
-                      self.sub_arrays[shard], self.metric, self.ef,
+                      self.arena, self.metric, self.ef,
                       self.result_bus, self.heartbeat,
                       batch_max=self.executor_batch, warm_k=self.warm_k)
         self.executors[name] = ex
@@ -311,6 +336,7 @@ class ServingEngine:
             "executors": execs,
             "pending_queries": pending,
             "submitted_queries": submitted,
+            "expired_queries": self.expired,
             "monitor_restarts": self.monitor.restarts,
             "queue_depths": [t.qsize() for t in self.topics],
         }
@@ -380,10 +406,21 @@ class ServingEngine:
         return futures
 
     def _merge_loop(self) -> None:
+        sweep_every = 0.25
+        if self.pending_deadline_s is not None:
+            sweep_every = max(0.05, min(0.25, self.pending_deadline_s / 4))
+        next_sweep = time.monotonic() + sweep_every
         while self._merger_running:
             try:
-                part: PartialResult = self.result_bus.get(timeout=0.05)
+                part: Optional[PartialResult] = self.result_bus.get(
+                    timeout=0.05)
             except queue.Empty:
+                part = None
+            now = time.monotonic()
+            if self.pending_deadline_s is not None and now >= next_sweep:
+                next_sweep = now + sweep_every
+                self._expire_pending(now)
+            if part is None:
                 continue
             with self._lock:
                 if part.query_id not in self._pending:
@@ -393,19 +430,28 @@ class ServingEngine:
                 if len(parts) < req.num_topics:
                     continue
                 del self._pending[part.query_id]
-            ids = np.concatenate([p.ids for p in parts])
-            scores = np.concatenate([p.scores for p in parts])
-            order = np.argsort(-scores)
-            seen, top_ids, top_scores = set(), [], []
-            for j in order:
-                v = int(ids[j])
-                if v < 0 or v in seen:
-                    continue
-                seen.add(v)
-                top_ids.append(v)
-                top_scores.append(scores[j])
-                if len(top_ids) == req.k:
-                    break
+            # shared dedup-top-k merge (the same semantics the fused
+            # arena pipeline runs on device via the merge_topk kernel)
+            ids = np.concatenate([p.ids for p in parts])[None, :]
+            scores = np.concatenate([p.scores for p in parts])[None, :]
+            top_scores, top_ids = merge_topk_np(scores, ids, k=req.k)
+            found = top_ids[0] >= 0
             fut.set_result(QueryResult(
-                req.query_id, np.asarray(top_ids), np.asarray(top_scores),
+                req.query_id, top_ids[0][found], top_scores[0][found],
                 time.monotonic() - req.submitted_at))
+
+    def _expire_pending(self, now: float) -> None:
+        """Fail pending queries older than the deadline (their shard may
+        have lost every live replica — the leak this bounds)."""
+        expired = []
+        with self._lock:
+            for qid, (req, parts, fut) in list(self._pending.items()):
+                if now - req.submitted_at > self.pending_deadline_s:
+                    del self._pending[qid]
+                    expired.append((req, len(parts), fut))
+        for req, got, fut in expired:
+            self.expired += 1
+            fut.set_exception(QueryExpiredError(
+                f"query {req.query_id} expired after "
+                f"{self.pending_deadline_s}s with {got}/{req.num_topics} "
+                f"partial results (shard replicas lost or overloaded)"))

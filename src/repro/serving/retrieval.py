@@ -9,10 +9,12 @@ kNN distribution over the vocab and interpolated with the LM distribution
 Datastore keys are hidden states (works identically for attention and
 attention-free archs), values are the observed next tokens.
 
-Retrieval runs either single-host (``search_single_host``) or through
-the distributed serving engine via a :class:`PyramidClient` session —
-``open_datastore_client`` starts the engine and ``knn_probs(...,
-client=...)`` routes lookups through its futures surface.
+Retrieval runs either single-host (``search_single_host``, now the fused
+route->search->merge pipeline over the index's device-resident
+``ShardArena``) or through the distributed serving engine via a
+:class:`PyramidClient` session — ``open_datastore_client`` starts the
+engine and ``knn_probs(..., client=...)`` routes lookups through its
+futures surface. Both paths share one arena per index (one HBM copy).
 """
 from __future__ import annotations
 

@@ -1,0 +1,215 @@
+"""ShardArena + fused pipeline: oracle parity on all three metrics,
+three-way path parity (SPMD / single-host / engine) incl. MIPS
+replication dedup, and the one-arena-per-index memory model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import hnsw as H
+from repro.core import metrics as M
+from repro.core.arena import ShardArena, arena_search
+from repro.core.distributed import (make_pyramid_search_fn,
+                                    search_single_host,
+                                    search_single_host_python)
+from repro.core.meta_index import build_pyramid_index
+from repro.core.router import route_queries
+from repro.data.synthetic import clustered_vectors
+
+
+def _mips_data(seed=0, n=2000, d=12):
+    rng = np.random.default_rng(seed)
+    dirs = rng.normal(size=(16, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    asg = rng.integers(0, 16, size=n)
+    x = dirs[asg] + 0.2 * rng.normal(size=(n, d))
+    norms = rng.lognormal(mean=0.0, sigma=0.8, size=(n, 1))
+    return (x * norms).astype(np.float32), \
+        rng.normal(size=(32, d)).astype(np.float32)
+
+
+def _build(x, metric, replication_r=0, branching_factor=2, num_shards=4):
+    cfg = PyramidConfig(metric=metric, num_shards=num_shards, meta_size=48,
+                        sample_size=1200, branching_factor=branching_factor,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=60,
+                        replication_r=replication_r, kmeans_iters=6)
+    return build_pyramid_index(x, cfg)
+
+
+def _oracle_search(index, queries, k):
+    """Host-side Alg. 4 oracle: ``search_numpy`` per routed shard + a
+    plain-python first-occurrence dedup merge. Fully independent of the
+    fused pipeline and of the merge_topk kernel family."""
+    cfg = index.config
+    metric = "ip" if cfg.is_mips else cfg.metric
+    q = M.preprocess_queries(queries, cfg.metric)
+    mask, _ = route_queries(
+        index.meta_arrays(), jnp.asarray(index.part_of_center),
+        jnp.asarray(q), metric=metric,
+        branching_factor=cfg.branching_factor,
+        num_shards=index.num_shards, ef=max(64, cfg.branching_factor))
+    mask = np.asarray(mask)
+    out = np.full((q.shape[0], k), -1, np.int64)
+    for i in range(q.shape[0]):
+        found = []
+        for s in np.where(mask[i])[0]:
+            ids, scores = H.search_numpy(
+                index.subs[s], q[i][None, :], k=k, ef=cfg.ef_search)
+            found += [(float(sc), int(v)) for v, sc in
+                      zip(ids[0], scores[0]) if v >= 0]
+        seen = set()
+        j = 0
+        for sc, v in sorted(found, key=lambda t: -t[0]):
+            if v in seen:
+                continue
+            seen.add(v)
+            out[i, j] = v
+            j += 1
+            if j == k:
+                break
+    return out
+
+
+def _recall(ids, true_ids):
+    return sum(len(set(np.asarray(a).tolist()) & set(b.tolist()))
+               for a, b in zip(ids, true_ids)) / true_ids.size
+
+
+def _assert_deduped(ids):
+    for row in np.asarray(ids):
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), row
+
+
+@pytest.mark.parametrize("metric", ["l2", "angular", "ip"])
+def test_arena_search_matches_search_numpy_oracle(metric):
+    if metric == "l2":
+        x = clustered_vectors(2000, 12, 16, seed=1)
+        rng = np.random.default_rng(2)
+        q = x[rng.choice(2000, 32)] + 0.01 * rng.normal(
+            size=(32, 12)).astype(np.float32)
+        idx = _build(x, metric)
+    else:
+        x, q = _mips_data(seed=3)
+        # ip exercises Alg. 5 replication: one global id in two shards
+        idx = _build(x, metric, replication_r=40 if metric == "ip" else 0)
+    if metric == "ip":
+        assert idx.build_stats["replicated_items"] > 0
+    xn = M.preprocess_dataset(x, metric)
+    qn = M.preprocess_queries(q, metric)
+    bf_metric = "ip" if metric != "l2" else "l2"
+    true_ids, _ = M.brute_force_topk(qn, xn, 10, bf_metric)
+
+    cfg = idx.config
+    m = "ip" if cfg.is_mips else metric
+    ids, scores, mask = arena_search(
+        idx.arena(), idx.meta_arrays(), jnp.asarray(idx.part_of_center),
+        jnp.asarray(qn), metric=m, k=10, ef=cfg.ef_search,
+        branching_factor=cfg.branching_factor)
+    ids = np.asarray(ids)
+    _assert_deduped(ids)
+    oracle_ids = _oracle_search(idx, q, k=10)
+    _assert_deduped(oracle_ids)
+    r_fused, r_oracle = _recall(ids, true_ids), _recall(oracle_ids, true_ids)
+    assert r_fused > 0.5, (metric, r_fused)
+    assert abs(r_fused - r_oracle) < 0.25, (metric, r_fused, r_oracle)
+
+
+def test_three_way_parity_with_mips_replication_dedup():
+    """SPMD / single-host / engine must agree, including on the MIPS
+    replication case where one global id comes back from two shards."""
+    from repro.serving.engine import ServingEngine
+
+    x, q = _mips_data(seed=5)
+    idx = _build(x, "ip", replication_r=60, branching_factor=2)
+    assert idx.build_stats["replicated_items"] > 0
+    true_ids, _ = M.brute_force_topk(q, x, 10, "ip")
+
+    ids_host, _, _ = search_single_host(idx, q, k=10)
+    _assert_deduped(ids_host)
+
+    mesh = jax.make_mesh((1,), ("model",))
+    fn = make_pyramid_search_fn(mesh, idx.config, k=10, batch=len(q),
+                                ef=idx.config.ef_search)
+    ids_spmd, _ = fn(idx.arena(), idx.meta_arrays(),
+                     jnp.asarray(idx.part_of_center), jnp.asarray(q))
+    ids_spmd = np.asarray(ids_spmd)
+    _assert_deduped(ids_spmd)
+
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        futures = eng.submit(q, k=10)
+        results = [f.result(timeout=60) for f in futures]
+    finally:
+        eng.shutdown()
+    ids_eng = [r.ids for r in results]
+    _assert_deduped(ids_eng)
+
+    recalls = {
+        "host": _recall(ids_host, true_ids),
+        "spmd": _recall(ids_spmd, true_ids),
+        "engine": _recall(ids_eng, true_ids),
+    }
+    for name, r in recalls.items():
+        assert r > 0.5, (name, recalls)
+    rs = list(recalls.values())
+    assert max(rs) - min(rs) < 0.25, recalls
+
+
+def test_fused_matches_legacy_python_loop():
+    x = clustered_vectors(2000, 12, 16, seed=7)
+    rng = np.random.default_rng(8)
+    q = x[rng.choice(2000, 24)] + 0.01 * rng.normal(
+        size=(24, 12)).astype(np.float32)
+    idx = _build(x, "l2")
+    ids_f, _, mask_f = search_single_host(idx, q, k=10)
+    ids_p, _, mask_p = search_single_host_python(idx, q, k=10)
+    np.testing.assert_array_equal(mask_f, mask_p)
+    same = sum(set(a[a >= 0].tolist()) == set(b[b >= 0].tolist())
+               for a, b in zip(ids_f, ids_p))
+    assert same >= int(0.9 * len(q)), (same, len(q))
+
+
+def test_one_arena_per_index_shared_views():
+    x = clustered_vectors(1200, 8, 8, seed=9)
+    idx = _build(x, "l2")
+    arena = idx.arena()
+    assert idx.arena() is arena                  # memoised
+    assert arena.num_shards == idx.num_shards
+    # equal-padded: every shard view has identical shapes => one jit
+    # compile serves every executor in an engine
+    v0 = arena.shard_view(0)
+    assert arena.shard_view(0) is v0             # memoised view
+    for s in range(arena.num_shards):
+        assert arena.shard_view(s).data.shape == v0.data.shape
+    # sub_arrays is a view of the same arena (migration surface)
+    assert idx.sub_arrays(1) is arena.shard_view(1)
+    # pad rows are inert: id -1, no neighbours
+    n1 = idx.subs[1].n
+    pad_ids = np.asarray(arena.ids[1][n1:])
+    assert (pad_ids == -1).all()
+    assert (np.asarray(arena.bottom[1][n1:]) == -1).all()
+
+
+def test_arena_cache_dropped_on_pickle_and_update():
+    import pickle
+
+    from repro.core.updates import add_items
+    x = clustered_vectors(1200, 8, 8, seed=10)
+    idx = _build(x, "l2")
+    a1 = idx.arena()
+    blob = pickle.dumps(idx)
+    loaded = pickle.loads(blob)
+    assert getattr(loaded, "_arena", None) is None   # derived, not stored
+    add_items(idx, clustered_vectors(40, 8, 4, seed=11))
+    assert idx.arena() is not a1                     # invalidated
+
+
+def test_stacked_shards_alias_still_works():
+    from repro.core.distributed import StackedShards, stack_shards
+    assert StackedShards is ShardArena
+    x = clustered_vectors(1200, 8, 8, seed=12)
+    idx = _build(x, "l2")
+    assert stack_shards(idx) is idx.arena()

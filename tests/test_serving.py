@@ -124,6 +124,70 @@ def test_engine_failure_recovery(engine_index):
         eng.shutdown()
 
 
+def test_engine_mixed_k_batches(engine_index):
+    """Executors drain a topic without grouping by k: a mixed batch must
+    search at max(k) and trim per request, never at batch[0].k."""
+    from repro.serving.engine import QueryRequest
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        q = query_set(x, 8, seed=7)
+        # deterministic unit check on the drain-batch search itself
+        ex = next(iter(eng.executors.values()))
+        reqs = [QueryRequest(0, q[0], 3, 1), QueryRequest(1, q[1], 9, 1),
+                QueryRequest(2, q[2], 1, 1)]
+        outs = ex._search(reqs)
+        assert [len(ids) for ids, _ in outs] == [3, 9, 1]
+        assert all(len(ids) == len(scores) for ids, scores in outs)
+        # end-to-end: interleaved submits with different k
+        futs_small = eng.submit(q[:4], k=2)
+        futs_large = eng.submit(q[4:], k=12)
+        small = [f.result(timeout=30) for f in futs_small]
+        large = [f.result(timeout=30) for f in futs_large]
+        assert all(len(r.ids) == 2 for r in small)
+        assert all(len(r.ids) == 12 for r in large), \
+            [len(r.ids) for r in large]
+        for r in small + large:   # dedup + sorted per result
+            assert len(set(r.ids.tolist())) == len(r.ids)
+            assert (np.diff(r.scores) <= 1e-5).all()
+    finally:
+        eng.shutdown()
+
+
+def test_engine_pending_queries_expire(engine_index):
+    """A query whose shard lost every live replica must not leak in
+    ``_pending`` forever: it fails with QueryExpiredError after the
+    configured deadline."""
+    from repro.core.client import QueryExpiredError
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1, auto_restart=False,
+                        pending_deadline_s=1.0)
+    try:
+        for name in list(eng.executors):   # all replica groups die
+            eng.kill_executor(name)
+        time.sleep(0.3)                    # let executors drain out
+        futs = eng.submit(query_set(x, 4, seed=8), k=5)
+        for f in futs:
+            with pytest.raises(QueryExpiredError):
+                f.result(timeout=10)
+        assert eng.stats()["expired_queries"] == len(futs)
+        assert eng.stats()["pending_queries"] == 0
+    finally:
+        eng.shutdown()
+
+
+def test_engine_healthy_queries_unaffected_by_deadline(engine_index):
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1, pending_deadline_s=30.0)
+    try:
+        futs = eng.submit(query_set(x, 8, seed=9), k=5)
+        res = [f.result(timeout=30) for f in futs]
+        assert len(res) == 8
+        assert eng.stats()["expired_queries"] == 0
+    finally:
+        eng.shutdown()
+
+
 # ---------------------------------------------------------------------------
 # kNN-LM retrieval
 # ---------------------------------------------------------------------------
