@@ -14,6 +14,7 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.common.config import PyramidConfig
+from repro.common.utils import nearest_rank
 from repro.core import metrics as M
 from repro.core.client import PyramidClient, SearchFuture
 from repro.core.client import gather as client_gather
@@ -102,6 +103,51 @@ def precision(found_ids: np.ndarray, true_ids: np.ndarray) -> float:
     hits = sum(len(set(f.tolist()) & set(t.tolist()))
                for f, t in zip(found_ids, true_ids))
     return hits / true_ids.size
+
+
+def recall_at_k(results, true_ids: np.ndarray, *,
+                rows: Optional[Dict[int, int]] = None) -> float:
+    """recall@k over engine ``QueryResult`` rows.
+
+    ``rows`` maps ``query_id -> true_ids row`` (build it from the
+    submitted futures); without it results are scored positionally,
+    which is only correct when *no* future timed out — :func:`gather`
+    drops timeouts from the list, which would misalign every later
+    result with the wrong ground-truth row.
+    """
+    if not len(results):
+        return float("nan")
+    hits = 0
+    for i, r in enumerate(results):
+        t = true_ids[rows[r.query_id] if rows is not None else i]
+        hits += len(set(r.ids.tolist()) & set(t.tolist()))
+    return hits / (len(results) * true_ids.shape[1])
+
+
+def percentile(xs, q: float) -> float:
+    """Exact q-th percentile (0..100) of a latency sample; nan if empty.
+    Same nearest-rank definition the engine's LatencyTracker uses."""
+    xs = sorted(xs)
+    if not xs:
+        return float("nan")
+    return nearest_rank(xs, q)
+
+
+def latency_summary(results) -> Dict[str, float]:
+    """p50/p99/mean seconds over ``QueryResult.latency_s`` rows."""
+    lats = [r.latency_s for r in results]
+    return {"p50_s": percentile(lats, 50), "p99_s": percentile(lats, 99),
+            "mean_s": float(np.mean(lats)) if lats else float("nan")}
+
+
+def write_bench(path: Optional[str], figure: str, payload: dict) -> None:
+    """Write a ``BENCH_*.json`` artifact (CI uploads these to track the
+    robustness/perf trajectory); no-op when ``path`` is falsy."""
+    if not path:
+        return
+    import json
+    with open(path, "w") as f:
+        json.dump({"figure": figure, **payload}, f, indent=2)
 
 
 def emit(name: str, us_per_call: float, derived: str) -> None:

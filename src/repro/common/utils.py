@@ -1,6 +1,7 @@
 """Small shared utilities."""
 from __future__ import annotations
 
+import math
 import time
 from contextlib import contextmanager
 from typing import Iterator
@@ -44,3 +45,13 @@ def round_up(a: int, b: int) -> int:
 
 def l2_normalize(x: jnp.ndarray, axis: int = -1, eps: float = 1e-12) -> jnp.ndarray:
     return x / (jnp.linalg.norm(x, axis=axis, keepdims=True) + eps)
+
+
+def nearest_rank(sorted_xs, q: float) -> float:
+    """q-th percentile (0..100) of an already-sorted sample, nearest-rank
+    (index ``ceil(q/100 * n) - 1``, so q=50 over [a, b] reports ``a``) —
+    the ONE quantile definition shared by the serving engine's hedge
+    deadlines (``LatencyTracker``) and the benchmark latency reports, so
+    the two never silently diverge."""
+    n = len(sorted_xs)
+    return sorted_xs[max(0, min(n - 1, math.ceil(q / 100.0 * n) - 1))]

@@ -24,7 +24,11 @@ Design notes:
   * a timed-out ``result()`` raises :class:`TimeoutError` instead of the
     query silently vanishing from the batch;
   * engine shutdown fails all in-flight futures with
-    :class:`EngineShutdownError` so callers never hang on a dead engine.
+    :class:`EngineShutdownError` so callers never hang on a dead engine;
+  * robustness is visible at the future level: ``SearchFuture.hedges``
+    counts the engine's hedge/retry re-dispatches for that query (the
+    final count also rides on ``QueryResult.hedges``), so a caller can
+    tell a first-try answer from one rescued off a straggler.
 
 The module deliberately does not import the serving engine: the client is
 duck-typed over any object with ``submit / scale / stats / shutdown``,
@@ -77,6 +81,7 @@ class SearchFuture:
         self._result: Optional["QueryResult"] = None
         self._exception: Optional[BaseException] = None
         self._callbacks: List[Callable[["SearchFuture"], None]] = []
+        self._hedges = 0
 
     # -- reader side -------------------------------------------------------
 
@@ -110,6 +115,15 @@ class SearchFuture:
                     f"{timeout}s")
             return self._exception
 
+    @property
+    def hedges(self) -> int:
+        """Hedge/retry re-dispatches the engine has issued for this query
+        so far (live counter; the final count also arrives on
+        ``QueryResult.hedges``). 0 means the primary dispatch answered
+        every shard within its latency deadline."""
+        with self._cond:
+            return self._hedges
+
     def add_done_callback(self,
                           fn: Callable[["SearchFuture"], None]) -> None:
         """Call ``fn(self)`` when the future completes (immediately if it
@@ -121,6 +135,12 @@ class SearchFuture:
         fn(self)
 
     # -- engine side -------------------------------------------------------
+
+    def record_hedge(self) -> None:
+        """Engine-side: note one hedge/retry re-dispatch for this query
+        (visible to callers via :attr:`hedges` while still pending)."""
+        with self._cond:
+            self._hedges += 1
 
     def set_result(self, result: "QueryResult") -> None:
         self._finish(result=result)

@@ -16,15 +16,34 @@ for the machine cluster (DESIGN.md §3):
     ``SearchFuture`` (``repro.core.client``) keyed by query id, so any
     number of callers can share one engine without seeing each other's
     results;
-  * a Monitor thread is the Zookeeper/Master analogue: executors heartbeat
-    by touching their lock timestamp; on expiry the monitor restarts the
-    executor on the same "machine" (thread pool).
+  * a Monitor thread is the Zookeeper/Master analogue — and a real
+    *supervisor*, not just a detector: on a dead or stuck executor it
+    re-enqueues that executor's in-flight batch items and respawns the
+    replica (bounded restarts with exponential backoff), recording a
+    recovery timeline exposed via ``stats()``.
 
-Straggler injection (`set_cpu_share`) and failure injection (`kill`) drive
-the Fig. 12 / Fig. 13 benchmarks.
+Active robustness (Fig. 12 / Fig. 13 mechanisms):
+
+  * **hedged dispatch** — a per-shard :class:`LatencyTracker` streams
+    p50/p99 over completed partials; the merger thread re-enqueues a
+    query's shard-work once it has waited longer than a deadline derived
+    from the tracked percentile (``hedge_factor * p99``), so a replica
+    peer races the straggler. Duplicate partials are resolved
+    first-result-wins in ``_merge_loop`` — the same dedup that makes the
+    at-least-once requeue paths safe;
+  * **automatic failure recovery** — executors publish their drained
+    batch as ``inflight``; whichever of (the dying executor itself, the
+    Monitor) gets there first re-enqueues the items, so a killed,
+    crashed, or hung executor loses nothing.
+
+Fault injection is scripted, not slept: a
+:class:`repro.serving.faults.FaultSchedule` fires kill / restart /
+cpu_share events at deterministic batch-drain boundaries, which is what
+the Fig. 12/13 benchmarks and ``tests/test_faults.py`` replay.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import queue
 import threading
@@ -34,7 +53,7 @@ from typing import Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.config import PyramidConfig
+from repro.common.utils import nearest_rank
 from repro.core import hnsw as H
 from repro.core import metrics as M
 from repro.core.arena import ShardArena
@@ -43,6 +62,7 @@ from repro.core.client import (EngineShutdownError, QueryExpiredError,
 from repro.core.meta_index import PyramidIndex
 from repro.core.router import route_queries
 from repro.kernels.merge_topk import merge_topk_np
+from repro.serving.faults import FaultSchedule
 
 
 @dataclasses.dataclass
@@ -51,7 +71,9 @@ class QueryRequest:
     vector: np.ndarray
     k: int
     num_topics: int           # how many partial results to expect
-    submitted_at: float = 0.0
+    submitted_at: float = 0.0  # for topic copies: this dispatch's enqueue time
+    shard: int = -1           # which topic this copy was enqueued to
+    attempt: int = 0          # 0 = primary dispatch, >0 = hedge/redispatch
 
 
 @dataclasses.dataclass
@@ -59,6 +81,9 @@ class PartialResult:
     query_id: int
     ids: np.ndarray
     scores: np.ndarray
+    shard: int = -1
+    attempt: int = 0
+    enqueued_at: float = 0.0  # dispatch time of the request copy served
 
 
 @dataclasses.dataclass
@@ -67,6 +92,54 @@ class QueryResult:
     ids: np.ndarray
     scores: np.ndarray
     latency_s: float
+    hedges: int = 0           # hedge re-dispatches issued for this query
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Coordinator-side state for one in-flight query."""
+    req: QueryRequest
+    fut: SearchFuture
+    expected: Tuple[int, ...]             # shard ids awaited
+    parts: Dict[int, PartialResult]       # shard -> first-arrived partial
+    dispatched: Dict[int, float]          # shard -> last dispatch time
+    attempts: Dict[int, int]              # shard -> dispatch count
+    hedges: int = 0
+
+
+class LatencyTracker:
+    """Streaming per-shard latency percentiles over completed partials.
+
+    Bounded window per shard (default 256 newest observations); p50/p99
+    are exact over the window. ``quantile`` returns ``None`` until a
+    shard has ``min_samples`` observations so a cold engine does not
+    hedge off noise.
+    """
+
+    def __init__(self, window: int = 256, min_samples: int = 8):
+        self.min_samples = min_samples
+        self._lat: Dict[int, collections.deque] = collections.defaultdict(
+            lambda: collections.deque(maxlen=window))
+        self._lock = threading.Lock()
+
+    def observe(self, shard: int, latency_s: float) -> None:
+        with self._lock:
+            self._lat[shard].append(latency_s)
+
+    def quantile(self, shard: int, q: float) -> Optional[float]:
+        """Exact q-th percentile (0..100) over the window, or None."""
+        with self._lock:
+            xs = sorted(self._lat.get(shard, ()))
+        if len(xs) < self.min_samples:
+            return None
+        return nearest_rank(xs, q)
+
+    def snapshot(self) -> Dict[int, Dict[str, float]]:
+        with self._lock:
+            data = {s: sorted(d) for s, d in self._lat.items()}
+        return {s: {"n": len(xs), "p50": nearest_rank(xs, 50),
+                    "p99": nearest_rank(xs, 99)}
+                for s, xs in data.items() if xs}
 
 
 class Executor(threading.Thread):
@@ -75,7 +148,8 @@ class Executor(threading.Thread):
     def __init__(self, name: str, topic: "queue.Queue", shard_id: int,
                  arena: ShardArena, metric: str, ef: int,
                  result_bus: "queue.Queue", heartbeat: Dict[str, float],
-                 batch_max: int = 32, warm_k: int = 10):
+                 batch_max: int = 32, warm_k: int = 10,
+                 fault_tick=None, redispatch=None):
         super().__init__(name=name, daemon=True)
         self.topic = topic
         self.shard_id = shard_id
@@ -90,12 +164,44 @@ class Executor(threading.Thread):
         self.heartbeat = heartbeat
         self.batch_max = batch_max
         self.warm_k = warm_k
+        self.fault_tick = fault_tick   # engine hook: batch-drain boundary
+        self.redispatch = redispatch   # engine hook: bookkept requeue
         self.cpu_share = 1.0        # straggler injection: <1 adds sleep
         self.alive = True
+        self.warmed = False         # past jit warmup (monitor grace gate)
+        self.busy_since = 0.0       # >0 while blocked inside _search
         self.processed = 0
+        self._inflight: List[QueryRequest] = []
+        self._inflight_lock = threading.Lock()
 
     def kill(self) -> None:
         self.alive = False
+
+    # -- in-flight handoff (at-least-once) ---------------------------------
+
+    def _set_inflight(self, batch: List[QueryRequest]) -> None:
+        with self._inflight_lock:
+            self._inflight = list(batch)
+
+    def take_inflight(self) -> List[QueryRequest]:
+        """Atomically claim the drained-but-unfinished batch. Called by
+        the dying executor itself AND by the supervising Monitor — the
+        pop guarantees the items are re-enqueued exactly once."""
+        with self._inflight_lock:
+            items, self._inflight = self._inflight, []
+            return items
+
+    def has_inflight(self) -> bool:
+        with self._inflight_lock:
+            return bool(self._inflight)
+
+    # -- search ------------------------------------------------------------
+
+    def _warmup(self) -> None:
+        """Populate the jit cache before claiming work."""
+        dummy = [QueryRequest(-1, np.zeros(self.graph.data.shape[1],
+                                           np.float32), self.warm_k, 0)]
+        self._search(dummy)
 
     def _search(self, batch):
         """Fixed-size padded search, engine-wide jit cache (arena views
@@ -122,65 +228,214 @@ class Executor(threading.Thread):
         return [(ids[i, : r.k], scores[i, : r.k])
                 for i, r in enumerate(batch)]
 
-    def run(self) -> None:
-        # warm up the jit cache before claiming work
-        dummy = [QueryRequest(-1, np.zeros(self.graph.data.shape[1],
-                                           np.float32), self.warm_k, 0)]
-        self._search(dummy)
+    def _throttle(self, busy_s: float) -> None:
+        """CPU-limit tool analogue: sleep off the lost share in small
+        slices so a heavily throttled executor still heartbeats and
+        still reacts to ``kill()`` promptly."""
+        end = time.monotonic() + busy_s * (1.0 / self.cpu_share - 1.0)
         while self.alive:
+            now = time.monotonic()
+            if now >= end:
+                break
+            self.heartbeat[self.name] = now
+            time.sleep(min(0.05, end - now))
+
+    def run(self) -> None:
+        try:
+            self._warmup()
+            self.warmed = True
             self.heartbeat[self.name] = time.monotonic()
-            try:
-                first: QueryRequest = self.topic.get(timeout=0.05)
-            except queue.Empty:
-                continue
-            # fetch budget shrinks with cpu share (Kafka max.poll.records
-            # semantics): a throttled consumer must not hoard the queue —
-            # its unfetched records stay available to replica peers
-            budget = max(1, int(self.batch_max * self.cpu_share))
-            batch = [first]
-            while len(batch) < budget:
+            while self.alive:
+                self.heartbeat[self.name] = time.monotonic()
                 try:
-                    batch.append(self.topic.get_nowait())
+                    first: QueryRequest = self.topic.get(timeout=0.05)
                 except queue.Empty:
-                    break
-            if not self.alive:   # killed mid-drain: requeue (at-least-once)
-                for r in batch:
-                    self.topic.put(r)
-                return
-            t0 = time.monotonic()
-            outs = self._search(batch)
-            dt = time.monotonic() - t0
-            if self.cpu_share < 1.0:  # CPU-limit tool analogue
-                time.sleep(dt * (1.0 / self.cpu_share - 1.0))
-            for r, (ids_r, scores_r) in zip(batch, outs):
-                self.result_bus.put(
-                    PartialResult(r.query_id, ids_r, scores_r))
-            self.processed += len(batch)
+                    continue
+                # fetch budget shrinks with cpu share (Kafka
+                # max.poll.records semantics): a throttled consumer must
+                # not hoard the queue — its unfetched records stay
+                # available to replica peers. Quadratic, not linear: a
+                # straggler's padded-batch search takes ~T/share end to
+                # end no matter how few items it drained, so the budget
+                # controls how MANY items suffer that delay — share**2
+                # keeps the expected straggler-added latency per item
+                # roughly constant (paper Fig. 12: throughput stable
+                # until the straggler is extremely slow)
+                budget = max(1, int(self.batch_max * self.cpu_share ** 2))
+                batch = [first]
+                while len(batch) < budget:
+                    try:
+                        batch.append(self.topic.get_nowait())
+                    except queue.Empty:
+                        break
+                self._set_inflight(batch)
+                if self.fault_tick is not None:
+                    self.fault_tick(self.name)   # drain boundary: a kill
+                if not self.alive:      # event lands mid-batch, items
+                    return              # in hand (finally re-enqueues)
+                t0 = time.monotonic()
+                # a thread blocked in XLA cannot heartbeat: flag the
+                # window so the monitor judges it on search_grace_s,
+                # not the loop-idle timeout
+                self.heartbeat[self.name] = t0
+                self.busy_since = t0
+                outs = self._search(batch)
+                # refresh the beat BEFORE dropping the busy flag: the
+                # instant busy_since clears, the monitor judges us on
+                # the short idle timeout again, and the pre-search
+                # heartbeat may already be older than that
+                self.heartbeat[self.name] = time.monotonic()
+                self.busy_since = 0.0
+                if self.cpu_share < 1.0:
+                    self._throttle(time.monotonic() - t0)
+                if not self.alive:      # killed during search/throttle:
+                    return              # a dead machine returns nothing
+                for r, (ids_r, scores_r) in zip(batch, outs):
+                    self.result_bus.put(PartialResult(
+                        r.query_id, ids_r, scores_r, shard=self.shard_id,
+                        attempt=r.attempt, enqueued_at=r.submitted_at))
+                self.processed += len(batch)
+                self._set_inflight([])
+        finally:
+            # crash, kill, or normal exit: nothing may die holding work.
+            # Route through the engine's redispatch so the bookkeeping
+            # (dispatch clocks, attempts, the ``redispatched`` counter,
+            # completed-query filtering) matches the Monitor's path —
+            # and the queued-behind-a-dead-executor time never pollutes
+            # the latency tracker the hedge deadline is derived from
+            self.alive = False
+            if self.redispatch is not None:
+                self.redispatch(self)
+            else:   # engine-less executor (unit tests): raw requeue
+                now = time.monotonic()
+                for r in self.take_inflight():
+                    self.topic.put(
+                        dataclasses.replace(r, submitted_at=now))
 
 
 class Monitor(threading.Thread):
-    """Zookeeper/Master analogue: restart executors whose lock expired."""
+    """Zookeeper/Master analogue, promoted to supervisor: detect dead or
+    stuck executors, re-enqueue their in-flight work, and respawn them
+    under bounded restarts with exponential backoff. Every action is
+    appended to a recovery timeline surfaced by ``engine.stats()``.
+    """
 
-    def __init__(self, engine: "ServingEngine", timeout_s: float = 0.5,
-                 period_s: float = 0.1):
+    def __init__(self, engine: "ServingEngine", timeout_s: float = 3.0,
+                 period_s: float = 0.1, max_restarts: int = 5,
+                 backoff_base_s: float = 0.05, backoff_cap_s: float = 2.0,
+                 warmup_grace_s: float = 30.0, search_grace_s: float = 30.0,
+                 restart_reset_s: float = 30.0, timeline_cap: int = 200):
         super().__init__(name="monitor", daemon=True)
         self.engine = engine
         self.timeout_s = timeout_s
         self.period_s = period_s
+        self.max_restarts = max_restarts
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.warmup_grace_s = warmup_grace_s
+        # a thread blocked inside one hnsw_search call cannot heartbeat,
+        # so a long-but-healthy search must not be declared stuck on the
+        # loop-idle timeout; it gets this (much longer) grace instead
+        self.search_grace_s = search_grace_s
+        # the restart budget decays after this much continuous health —
+        # max_restarts bounds crash *loops*, not lifetime failures
+        self.restart_reset_s = restart_reset_s
         self.running = True
         self.restarts = 0
+        self._timeline: collections.deque = collections.deque(
+            maxlen=timeline_cap)
+        self._timeline_lock = threading.Lock()
+        self._restart_counts: Dict[str, int] = {}
+        self._next_allowed: Dict[str, float] = {}
+        self._last_restart: Dict[str, float] = {}
+        self._gave_up: Dict[str, bool] = {}
+        self._suspected: set = set()
+
+    def _record(self, name: str, event: str, detail: str) -> None:
+        with self._timeline_lock:
+            self._timeline.append({
+                "t": round(time.monotonic() - self.engine._t0, 4),
+                "executor": name, "event": event, "detail": detail})
+
+    def timeline_snapshot(self) -> List[dict]:
+        with self._timeline_lock:
+            return list(self._timeline)
 
     def run(self) -> None:
         while self.running:
             time.sleep(self.period_s)
             now = time.monotonic()
             for name, ex in list(self.engine.executors.items()):
-                hb = self.engine.heartbeat.get(name, now)
-                if (not ex.is_alive() or not ex.alive or
-                        now - hb > self.timeout_s):
-                    if self.engine.auto_restart and not ex.alive:
-                        if self.engine.restart_executor(name):
-                            self.restarts += 1
+                dead = not ex.is_alive() or not ex.alive
+                if not dead:
+                    # heartbeat is seeded at spawn time, so an executor
+                    # that hangs before its first beat is *not* treated
+                    # as live forever (the pre-seed bug); warmup and
+                    # in-search windows get longer graces because a
+                    # thread inside one jit/XLA call cannot beat
+                    hb = self.engine.heartbeat.get(name, 0.0)
+                    grace = (self.warmup_grace_s if not ex.warmed
+                             else self.search_grace_s if ex.busy_since
+                             else self.timeout_s)
+                    if now - hb > grace:
+                        if self.engine.auto_restart:
+                            ex.kill()   # fence the hung thread off
+                            self._record(name, "stuck",
+                                         f"no heartbeat for "
+                                         f"{now - hb:.2f}s")
+                            dead = True
+                        elif name not in self._suspected:
+                            # detector mode: killing a replica we will
+                            # not respawn only makes things worse
+                            self._suspected.add(name)
+                            self._record(name, "stuck",
+                                         f"no heartbeat for {now - hb:.2f}"
+                                         "s (not fenced: auto_restart "
+                                         "off)")
+                    else:
+                        self._suspected.discard(name)
+                if not dead:
+                    # healthy: decay the restart budget after sustained
+                    # health so max_restarts bounds crash loops, not the
+                    # executor's lifetime (scale() also reuses names)
+                    if (name in self._restart_counts
+                            and now - self._last_restart.get(name, 0.0)
+                            > self.restart_reset_s):
+                        self._restart_counts.pop(name, None)
+                        self._next_allowed.pop(name, None)
+                        self._gave_up.pop(name, None)
+                    continue
+                # supervisor step 1: a dead executor's drained batch must
+                # not be lost — re-enqueue whatever it still held (the
+                # executor's own finally-requeue races us; take_inflight
+                # is an atomic pop, so items go back exactly once)
+                n = self.engine._redispatch_inflight(ex)
+                if n:
+                    self._record(name, "redispatch",
+                                 f"re-enqueued {n} in-flight items")
+                # supervisor step 2: respawn, bounded with backoff
+                if not self.engine.auto_restart:
+                    continue
+                if now < self._next_allowed.get(name, 0.0):
+                    continue
+                count = self._restart_counts.get(name, 0)
+                if count >= self.max_restarts:
+                    if not self._gave_up.get(name):
+                        self._gave_up[name] = True
+                        self._record(name, "gave_up",
+                                     f"max_restarts={self.max_restarts} "
+                                     "exhausted")
+                    continue
+                if self.engine.restart_executor(name):
+                    self.restarts += 1
+                    self._restart_counts[name] = count + 1
+                    self._last_restart[name] = now
+                    backoff = min(self.backoff_cap_s,
+                                  self.backoff_base_s * (2 ** count))
+                    self._next_allowed[name] = now + backoff
+                    self._record(name, "restart",
+                                 f"attempt {count + 1}/{self.max_restarts},"
+                                 f" next backoff {backoff:.2f}s")
 
 
 class ServingEngine:
@@ -189,7 +444,16 @@ class ServingEngine:
     def __init__(self, index: PyramidIndex, *, replicas: int = 1,
                  ef: Optional[int] = None, auto_restart: bool = True,
                  executor_batch: int = 16, warm_k: int = 10,
-                 pending_deadline_s: Optional[float] = 300.0):
+                 pending_deadline_s: Optional[float] = 300.0,
+                 hedge: bool = True,
+                 hedge_deadline_s: Optional[float] = None,
+                 hedge_percentile: float = 99.0,
+                 hedge_factor: float = 3.0,
+                 hedge_min_s: float = 0.05,
+                 hedge_cold_s: float = 1.0,
+                 hedge_max_attempts: int = 2,
+                 fault_schedule: Optional[FaultSchedule] = None,
+                 monitor_opts: Optional[dict] = None):
         self.index = index
         self.cfg = index.config
         self.metric = "ip" if self.cfg.is_mips else self.cfg.metric
@@ -203,6 +467,22 @@ class ServingEngine:
         # is failed with QueryExpiredError. None disables expiry.
         self.pending_deadline_s = pending_deadline_s
         self.expired = 0
+        # hedged dispatch: once a (query, shard) dispatch has waited
+        # past hedge_factor * tracked p{hedge_percentile} (or the fixed
+        # hedge_deadline_s override), re-enqueue it so a replica peer
+        # races the straggler; at most hedge_max_attempts hedges per
+        # (query, shard). First result wins, duplicates are dropped.
+        self.hedge = hedge
+        self.hedge_deadline_s = hedge_deadline_s
+        self.hedge_percentile = hedge_percentile
+        self.hedge_factor = hedge_factor
+        self.hedge_min_s = hedge_min_s
+        self.hedge_cold_s = hedge_cold_s
+        self.hedge_max_attempts = hedge_max_attempts
+        self.hedged_queries = 0    # queries hedged at least once
+        self.redispatched = 0      # total re-enqueues (hedge + recovery)
+        self.tracker = LatencyTracker()
+        self.faults = fault_schedule
 
         self.meta_arrays = index.meta_arrays()
         self.part_of_center = jnp.asarray(index.part_of_center)
@@ -215,16 +495,16 @@ class ServingEngine:
         self.executors: Dict[str, Executor] = {}
         self.replicas = replicas          # configured replicas per shard
         self._qid = 0
-        self._pending: Dict[
-            int, Tuple[QueryRequest, List[PartialResult], SearchFuture]] = {}
+        self._pending: Dict[int, _Pending] = {}
         self._lock = threading.Lock()
         self._scale_lock = threading.Lock()
         self._shutdown = False
+        self._t0 = time.monotonic()
 
         for s in range(self.w):
             for r in range(replicas):
                 self._spawn(s, r)
-        self.monitor = Monitor(self)
+        self.monitor = Monitor(self, **(monitor_opts or {}))
         self.monitor.start()
         self._merger = threading.Thread(target=self._merge_loop, daemon=True)
         self._merger_running = True
@@ -237,7 +517,13 @@ class ServingEngine:
         ex = Executor(name, self.topics[shard], shard,
                       self.arena, self.metric, self.ef,
                       self.result_bus, self.heartbeat,
-                      batch_max=self.executor_batch, warm_k=self.warm_k)
+                      batch_max=self.executor_batch, warm_k=self.warm_k,
+                      fault_tick=self._fault_tick,
+                      redispatch=self._redispatch_inflight)
+        # seed the heartbeat BEFORE the thread runs: an executor that
+        # dies or hangs before its first beat must look stale, not
+        # fresh-forever (the old ``heartbeat.get(name, now)`` bug)
+        self.heartbeat[name] = time.monotonic()
         self.executors[name] = ex
         ex.start()
         return ex
@@ -260,6 +546,16 @@ class ServingEngine:
 
     def set_cpu_share(self, name: str, share: float) -> None:
         self.executors[name].cpu_share = share
+
+    def install_fault_schedule(self, schedule: FaultSchedule) -> None:
+        """Arm a (new) fault script; steps count from this engine's next
+        batch drain. Replaces any previous schedule."""
+        self.faults = schedule
+
+    def _fault_tick(self, actor: str = "") -> None:
+        fs = self.faults
+        if fs is not None:
+            fs.tick(self, actor)
 
     @staticmethod
     def _replica_slot(name: str) -> int:
@@ -326,6 +622,8 @@ class ServingEngine:
         with self._lock:
             pending = len(self._pending)
             submitted = self._qid
+            hedged = self.hedged_queries
+            redispatched = self.redispatched
         execs = {
             name: {"shard": ex.shard_id, "alive": ex.alive,
                    "processed": ex.processed, "cpu_share": ex.cpu_share}
@@ -337,7 +635,13 @@ class ServingEngine:
             "pending_queries": pending,
             "submitted_queries": submitted,
             "expired_queries": self.expired,
-            "monitor_restarts": self.monitor.restarts,
+            "hedged_queries": hedged,
+            "redispatched": redispatched,
+            "restarts": self.monitor.restarts,
+            "monitor_restarts": self.monitor.restarts,   # legacy alias
+            "recovery_timeline": self.monitor.timeline_snapshot(),
+            "latency": self.tracker.snapshot(),
+            "fault_step": self.faults.step if self.faults else 0,
             "queue_depths": [t.qsize() for t in self.topics],
         }
 
@@ -350,9 +654,10 @@ class ServingEngine:
         self._merger_running = False
         for ex in list(self.executors.values()):   # snapshot: the monitor
             ex.kill()                              # may _spawn concurrently
-        for req, _, fut in pending:   # fail in-flight futures loudly
-            fut.set_exception(EngineShutdownError(
-                f"engine shut down with query {req.query_id} in flight"))
+        for entry in pending:   # fail in-flight futures loudly
+            entry.fut.set_exception(EngineShutdownError(
+                f"engine shut down with query {entry.req.query_id} "
+                "in flight"))
         # join so no thread dies inside an XLA call at interpreter
         # teardown (aborts the process with "terminate called ...").
         # One shared deadline: executors killed mid-jit-warmup can take
@@ -396,20 +701,109 @@ class ServingEngine:
             for i in range(q.shape[0]):
                 qid = self._qid
                 self._qid += 1
-                topics = np.where(mask[i])[0]
+                topics = tuple(int(s) for s in np.where(mask[i])[0])
                 req = QueryRequest(qid, q[i], k, len(topics), now)
                 fut = SearchFuture(qid)
-                self._pending[qid] = (req, [], fut)
+                if not topics:   # router selected nothing: empty result
+                    fut.set_result(QueryResult(
+                        qid, np.empty(0, np.int64),
+                        np.empty(0, np.float32), 0.0))
+                    futures.append(fut)
+                    continue
+                self._pending[qid] = _Pending(
+                    req=req, fut=fut, expected=topics, parts={},
+                    dispatched={s: now for s in topics},
+                    attempts={s: 1 for s in topics})
                 for s in topics:
-                    self.topics[s].put(req)
+                    self.topics[s].put(
+                        dataclasses.replace(req, shard=s))
                 futures.append(fut)
         return futures
+
+    # -- recovery / hedging ------------------------------------------------
+
+    def _redispatch_inflight(self, ex: Executor) -> int:
+        """Supervisor path: re-enqueue a dead executor's drained batch.
+        Only (query, shard) pairs still awaited are re-dispatched; the
+        rest were already answered by a replica peer. Returns how many
+        items went back on the topic."""
+        items = ex.take_inflight()
+        if not items:
+            return 0
+        requeue = []
+        now = time.monotonic()
+        with self._lock:
+            for r in items:
+                entry = self._pending.get(r.query_id)
+                if entry is None or r.shard in entry.parts:
+                    continue   # answered elsewhere: drop, don't redo
+                entry.attempts[r.shard] = (
+                    entry.attempts.get(r.shard, 1) + 1)
+                entry.dispatched[r.shard] = now
+                self.redispatched += 1
+                requeue.append(dataclasses.replace(
+                    r, attempt=entry.attempts[r.shard] - 1,
+                    submitted_at=now))
+        for r in requeue:
+            self.topics[r.shard].put(r)
+        return len(requeue)
+
+    def _hedge_deadline(self, shard: int) -> float:
+        if self.hedge_deadline_s is not None:
+            return self.hedge_deadline_s
+        p = self.tracker.quantile(shard, self.hedge_percentile)
+        if p is None:          # cold shard: no percentile to trust yet
+            return self.hedge_cold_s
+        return max(self.hedge_min_s, self.hedge_factor * p)
+
+    def _hedge_sweep(self, now: float) -> None:
+        """Merger-side straggler mitigation: re-enqueue shard-work that
+        has waited past its latency-derived deadline so a replica peer
+        races the original dispatch (first result wins)."""
+        # deadlines are per-shard, not per-query: compute each once per
+        # sweep, outside the engine lock (sorting the tracker window
+        # per pending entry would stall submit/merge under load)
+        deadlines = [self._hedge_deadline(s) for s in range(self.w)]
+        # only hedge shards whose topic queue is EMPTY: a non-empty
+        # queue means the missing partial is (or is behind) backlog the
+        # replicas simply haven't reached — re-enqueueing into that
+        # backlog multiplies load exactly at peak (a burst submit must
+        # not become a fleet-wide hedge storm). An empty queue with an
+        # overdue dispatch means some executor drained the item and is
+        # sitting on it — the straggler signature hedging exists for.
+        idle = [self.topics[s].qsize() == 0 for s in range(self.w)]
+        actions = []
+        with self._lock:
+            for entry in self._pending.values():
+                for s in entry.expected:
+                    if s in entry.parts or not idle[s]:
+                        continue
+                    attempts = entry.attempts.get(s, 1)
+                    if attempts > self.hedge_max_attempts:
+                        continue   # give up hedging; expiry still bounds
+                    if now - entry.dispatched[s] <= deadlines[s]:
+                        continue
+                    entry.attempts[s] = attempts + 1
+                    entry.dispatched[s] = now
+                    if entry.hedges == 0:
+                        self.hedged_queries += 1
+                    entry.hedges += 1
+                    entry.fut.record_hedge()
+                    self.redispatched += 1
+                    actions.append(dataclasses.replace(
+                        entry.req, shard=s, attempt=attempts,
+                        submitted_at=now))
+        for r in actions:
+            self.topics[r.shard].put(r)
+
+    # -- merge -------------------------------------------------------------
 
     def _merge_loop(self) -> None:
         sweep_every = 0.25
         if self.pending_deadline_s is not None:
             sweep_every = max(0.05, min(0.25, self.pending_deadline_s / 4))
         next_sweep = time.monotonic() + sweep_every
+        next_hedge = 0.0
         while self._merger_running:
             try:
                 part: Optional[PartialResult] = self.result_bus.get(
@@ -417,41 +811,60 @@ class ServingEngine:
             except queue.Empty:
                 part = None
             now = time.monotonic()
+            if self.hedge and now >= next_hedge:   # bounded sweep rate:
+                next_hedge = now + 0.05            # a fast result stream
+                self._hedge_sweep(now)             # must not sweep per-item
             if self.pending_deadline_s is not None and now >= next_sweep:
                 next_sweep = now + sweep_every
                 self._expire_pending(now)
             if part is None:
                 continue
             with self._lock:
-                if part.query_id not in self._pending:
-                    continue  # duplicate delivery (at-least-once): drop
-                req, parts, fut = self._pending[part.query_id]
-                parts.append(part)
-                if len(parts) < req.num_topics:
+                entry = self._pending.get(part.query_id)
+                if entry is None or part.shard in entry.parts:
+                    # late or hedged duplicate (at-least-once delivery):
+                    # first result won, drop this one
+                    continue
+                entry.parts[part.shard] = part
+                # per-shard service latency feeds the hedge deadline —
+                # WINNING partials only: a persistent straggler's losing
+                # deliveries would otherwise drag the tracked p99 up to
+                # its own latency and self-disable the hedging aimed at
+                # it (tracker has its own lock; never takes this one)
+                if part.enqueued_at > 0:
+                    self.tracker.observe(part.shard,
+                                         now - part.enqueued_at)
+                if len(entry.parts) < len(entry.expected):
                     continue
                 del self._pending[part.query_id]
             # shared dedup-top-k merge (the same semantics the fused
-            # arena pipeline runs on device via the merge_topk kernel)
+            # arena pipeline runs on device via the merge_topk kernel);
+            # concatenate in shard order so score ties break identically
+            # no matter which replica answered first
+            parts = [entry.parts[s] for s in sorted(entry.parts)]
             ids = np.concatenate([p.ids for p in parts])[None, :]
             scores = np.concatenate([p.scores for p in parts])[None, :]
-            top_scores, top_ids = merge_topk_np(scores, ids, k=req.k)
+            top_scores, top_ids = merge_topk_np(scores, ids, k=entry.req.k)
             found = top_ids[0] >= 0
-            fut.set_result(QueryResult(
-                req.query_id, top_ids[0][found], top_scores[0][found],
-                time.monotonic() - req.submitted_at))
+            entry.fut.set_result(QueryResult(
+                entry.req.query_id, top_ids[0][found],
+                top_scores[0][found],
+                time.monotonic() - entry.req.submitted_at,
+                hedges=entry.hedges))
 
     def _expire_pending(self, now: float) -> None:
         """Fail pending queries older than the deadline (their shard may
         have lost every live replica — the leak this bounds)."""
         expired = []
         with self._lock:
-            for qid, (req, parts, fut) in list(self._pending.items()):
-                if now - req.submitted_at > self.pending_deadline_s:
+            for qid, entry in list(self._pending.items()):
+                if now - entry.req.submitted_at > self.pending_deadline_s:
                     del self._pending[qid]
-                    expired.append((req, len(parts), fut))
-        for req, got, fut in expired:
+                    expired.append(entry)
+        for entry in expired:
             self.expired += 1
-            fut.set_exception(QueryExpiredError(
-                f"query {req.query_id} expired after "
-                f"{self.pending_deadline_s}s with {got}/{req.num_topics} "
+            entry.fut.set_exception(QueryExpiredError(
+                f"query {entry.req.query_id} expired after "
+                f"{self.pending_deadline_s}s with "
+                f"{len(entry.parts)}/{entry.req.num_topics} "
                 f"partial results (shard replicas lost or overloaded)"))

@@ -1,0 +1,313 @@
+"""Deterministic fault-injection tests for the serving engine's active
+robustness: scripted FaultSchedule storms (kill / restart / cpu_share at
+batch-drain boundaries), hedged dispatch with first-result-wins dedup,
+and the supervising Monitor (in-flight redispatch + bounded respawn).
+
+Everything here asserts the exactly-once contract: every submitted
+future resolves exactly once, no result is lost or duplicated, and
+recall stays within 2% of the fault-free run.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.serving import engine as E
+from repro.serving.engine import ServingEngine
+from repro.serving.faults import FaultEvent, FaultSchedule
+
+pytestmark = pytest.mark.faults
+
+
+@pytest.fixture(scope="module")
+def engine_index():
+    x = clustered_vectors(1500, 12, 12, seed=0)
+    cfg = PyramidConfig(metric="l2", num_shards=4, meta_size=48,
+                        sample_size=800, branching_factor=2, max_degree=12,
+                        max_degree_upper=6, ef_construction=40,
+                        ef_search=50, kmeans_iters=6)
+    return x, build_pyramid_index(x, cfg)
+
+
+def _collect(futures, timeout=60):
+    """Resolve all futures; assert the exactly-once contract."""
+    results = [f.result(timeout=timeout) for f in futures]
+    assert len(results) == len(futures)
+    qids = [r.query_id for r in results]
+    assert len(set(qids)) == len(qids), "a future resolved a foreign query"
+    assert qids == [f.query_id for f in futures]
+    for r in results:   # hedged duplicate partials must never leak through
+        assert len(set(r.ids.tolist())) == len(r.ids), \
+            f"duplicate ids in merged result {r.query_id}"
+        assert (np.diff(r.scores) <= 1e-5).all()
+    return results
+
+
+def _recall(results, queries, x, k=10):
+    true_ids, _ = M.brute_force_topk(queries, x, k, "l2")
+    hits = sum(len(set(r.ids.tolist()) & set(true_ids[i].tolist()))
+               for i, r in enumerate(results))
+    return hits / true_ids.size
+
+
+# ---------------------------------------------------------------------------
+# FaultSchedule semantics
+# ---------------------------------------------------------------------------
+
+
+def test_storm_is_seed_deterministic():
+    a = FaultSchedule.storm(5, num_shards=4, replicas=2)
+    b = FaultSchedule.storm(5, num_shards=4, replicas=2)
+    assert a.events == b.events          # same seed -> identical script
+    c = FaultSchedule.storm(6, num_shards=4, replicas=2)
+    assert a.events != c.events
+
+
+def test_fault_event_rejects_unknown_action():
+    with pytest.raises(ValueError, match="unknown fault action"):
+        FaultEvent(step=1, action="explode", target="exec-s0-r0")
+
+
+def test_cpu_share_event_requires_valid_share():
+    # a forgotten value would set share 0.0 -> divide-by-zero throttle
+    with pytest.raises(ValueError, match="cpu_share"):
+        FaultEvent(step=1, action="cpu_share", target="exec-s0-r0")
+    with pytest.raises(ValueError, match="cpu_share"):
+        FaultEvent(step=1, action="cpu_share", target="exec-s0-r0",
+                   value=1.5)
+
+
+# ---------------------------------------------------------------------------
+# scripted storm: kill every r0 mid-batch, restart half, straggle one
+# ---------------------------------------------------------------------------
+
+
+def test_scripted_storm_exactly_once_and_recall(engine_index):
+    x, idx = engine_index
+    q = query_set(x, 48, seed=11)
+
+    # fault-free reference run (passive, no faults)
+    eng = ServingEngine(idx, replicas=2, hedge=False, auto_restart=False)
+    try:
+        free = _collect(eng.submit(q, k=10))
+    finally:
+        eng.shutdown()
+    recall_free = _recall(free, q, x)
+
+    # the storm: auto_restart off so ONLY the scripted restarts happen
+    storm = FaultSchedule([
+        FaultEvent(step=3, action="cpu_share", target="exec-s2-r1",
+                   value=0.1),                              # straggle one
+        FaultEvent(step=4, action="kill", target="exec-s*-r0"),  # all r0
+        FaultEvent(step=8, action="restart", target="exec-s0-r0"),
+        FaultEvent(step=8, action="restart", target="exec-s1-r0"),
+    ])
+    eng = ServingEngine(idx, replicas=2, hedge=True,
+                        hedge_deadline_s=0.25, auto_restart=False,
+                        executor_batch=4, fault_schedule=storm)
+    try:
+        stormy = _collect(eng.submit(q, k=10), timeout=120)
+        stats = eng.stats()
+    finally:
+        eng.shutdown()
+
+    recall_storm = _recall(stormy, q, x)
+    assert abs(recall_storm - recall_free) <= 0.02, \
+        f"storm cost recall: {recall_storm:.3f} vs {recall_free:.3f}"
+    # the whole script fired, and the kill matched every shard's r0
+    assert len(storm.fired) == len(storm.events)
+    kill = next(f for f in storm.fired if f["action"] == "kill")
+    assert kill["matched"] == [f"exec-s{s}-r0" for s in range(4)]
+    assert stats["fault_step"] >= 8
+
+
+def test_seeded_storm_with_supervisor(engine_index):
+    """A random (but seeded) storm under the full supervisor: whatever
+    the script kills, the Monitor redispatches + respawns, and every
+    future still resolves exactly once."""
+    x, idx = engine_index
+    q = query_set(x, 32, seed=13)
+    storm = FaultSchedule.storm(21, num_shards=4, replicas=2,
+                                n_events=6, max_step=10)
+    eng = ServingEngine(idx, replicas=2, auto_restart=True,
+                        executor_batch=4, fault_schedule=storm,
+                        monitor_opts={"backoff_base_s": 0.02,
+                                      "period_s": 0.05})
+    try:
+        results = _collect(eng.submit(q, k=10), timeout=120)
+        assert _recall(results, q, x) > 0.6
+        assert storm.done()
+    finally:
+        eng.shutdown()
+
+
+def test_when_actor_pins_kill_to_victims_own_drain(engine_index):
+    """``when_actor`` defers a due kill until the victim itself ticks,
+    so it always dies holding a drained batch — its in-flight items are
+    re-enqueued with full bookkeeping and the supervisor respawns it."""
+    x, idx = engine_index
+    victim = "exec-s2-r0"
+    storm = FaultSchedule([FaultEvent(step=1, action="kill",
+                                      target=victim, when_actor=victim)])
+    eng = ServingEngine(idx, replicas=1, hedge=False, executor_batch=4,
+                        fault_schedule=storm,
+                        monitor_opts={"backoff_base_s": 0.02,
+                                      "period_s": 0.05})
+    try:
+        results = _collect(eng.submit(query_set(x, 24, seed=19), k=5),
+                           timeout=60)
+        assert len(results) == 24
+        assert storm.done()
+        assert storm.fired[0]["matched"] == [victim]
+        stats = eng.stats()
+        assert stats["redispatched"] >= 1   # died with items in hand
+        assert stats["restarts"] >= 1
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# monitor-as-supervisor: heartbeat seeding, stuck detection, redispatch
+# ---------------------------------------------------------------------------
+
+
+def test_kill_before_first_heartbeat_is_restarted(engine_index):
+    """Regression: heartbeats are seeded at spawn, so an executor killed
+    before its first beat (e.g. still in jit warmup) is detected and
+    respawned instead of being treated as live forever."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=1,
+                        monitor_opts={"backoff_base_s": 0.02,
+                                      "period_s": 0.05})
+    try:
+        assert set(eng.heartbeat) == set(eng.executors)  # seeded at spawn
+        eng.kill_executor("exec-s1-r0")   # quite possibly pre-first-beat
+        deadline = time.monotonic() + 15
+        while time.monotonic() < deadline and eng.stats()["restarts"] == 0:
+            time.sleep(0.05)
+        assert eng.stats()["restarts"] >= 1
+        _collect(eng.submit(query_set(x, 8, seed=14), k=5))
+    finally:
+        eng.shutdown()
+
+
+def test_stuck_executor_detected_via_seeded_heartbeat(engine_index,
+                                                      monkeypatch):
+    """An executor that hangs before ever heartbeating (mid-warmup) must
+    be fenced off and respawned. Under the old ``heartbeat.get(name,
+    now)`` default it looked perpetually fresh and shard 0 hung."""
+    x, idx = engine_index
+    orig = E.Executor._warmup
+    hung = []
+
+    def warmup(self):
+        if self.name == "exec-s0-r0" and not hung:
+            hung.append(self.name)
+            while self.alive:        # never heartbeats, never serves
+                time.sleep(0.01)
+            return                   # fenced off; run() exits on alive
+        return orig(self)
+
+    monkeypatch.setattr(E.Executor, "_warmup", warmup)
+    eng = ServingEngine(idx, replicas=1,
+                        monitor_opts={"warmup_grace_s": 0.4,
+                                      "timeout_s": 0.4, "period_s": 0.05,
+                                      "backoff_base_s": 0.02})
+    try:
+        results = _collect(eng.submit(query_set(x, 16, seed=15), k=5),
+                           timeout=60)
+        assert len(results) == 16
+        stats = eng.stats()
+        events = [e for e in stats["recovery_timeline"]
+                  if e["executor"] == "exec-s0-r0"]
+        assert any(e["event"] == "stuck" for e in events)
+        assert any(e["event"] == "restart" for e in events)
+        assert stats["restarts"] >= 1
+    finally:
+        eng.shutdown()
+
+
+def test_monitor_redispatches_inflight_of_hung_executor(engine_index,
+                                                        monkeypatch):
+    """An executor that hangs *mid-batch* (items drained, search never
+    returns) loses nothing: the Monitor fences it, atomically claims its
+    in-flight batch, re-enqueues it, and respawns the replica."""
+    x, idx = engine_index
+    orig = E.Executor._search
+    hung = []
+
+    def search(self, batch):
+        if self.name == "exec-s0-r0" and self.warmed and not hung:
+            hung.append(self.name)
+            # hold the batch until the monitor has fenced us off AND
+            # claimed the in-flight items (atomic pop -> exactly once)
+            while self.alive or self.has_inflight():
+                time.sleep(0.01)
+            return []                # fenced off; run() exits on alive
+        return orig(self, batch)
+
+    monkeypatch.setattr(E.Executor, "_search", search)
+    eng = ServingEngine(idx, replicas=1, hedge=False,
+                        monitor_opts={"timeout_s": 0.3, "period_s": 0.05,
+                                      "search_grace_s": 0.3,
+                                      "backoff_base_s": 0.02})
+    try:
+        results = _collect(eng.submit(query_set(x, 24, seed=16), k=5),
+                           timeout=60)
+        assert len(results) == 24
+        stats = eng.stats()
+        assert stats["redispatched"] >= 1     # monitor path, hedging off
+        events = {e["event"] for e in stats["recovery_timeline"]
+                  if e["executor"] == "exec-s0-r0"}
+        assert {"stuck", "redispatch", "restart"} <= events
+    finally:
+        eng.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# hedged dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_hedged_dispatch_rescues_straggling_shard(engine_index):
+    """Both replicas of shard 0 straggle hard: the latency deadline
+    trips, hedges are issued, duplicate partials are dropped
+    first-result-wins, and the hedge count is visible on the future and
+    the result."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=2, hedge=True,
+                        hedge_deadline_s=0.05, hedge_max_attempts=1,
+                        executor_batch=4)
+    try:
+        eng.set_cpu_share("exec-s0-r0", 0.05)
+        eng.set_cpu_share("exec-s0-r1", 0.05)
+        futs = eng.submit(query_set(x, 32, seed=17), k=5)
+        results = _collect(futs, timeout=120)
+        stats = eng.stats()
+        assert stats["hedged_queries"] >= 1
+        assert stats["redispatched"] >= stats["hedged_queries"]
+        hedged = [(f, r) for f, r in zip(futs, results) if r.hedges]
+        assert hedged, "no query recorded its hedges"
+        for f, r in hedged:
+            assert f.hedges == r.hedges   # future-level visibility
+    finally:
+        eng.shutdown()
+
+
+def test_hedging_idle_on_healthy_engine(engine_index):
+    """With healthy replicas the tracked-percentile deadline must not
+    fire spurious hedges (cold shards get the long cold deadline)."""
+    x, idx = engine_index
+    eng = ServingEngine(idx, replicas=2, hedge=True, hedge_cold_s=5.0)
+    try:
+        _collect(eng.submit(query_set(x, 24, seed=18), k=5))
+        stats = eng.stats()
+        assert stats["hedged_queries"] == 0
+        assert stats["redispatched"] == 0
+        assert stats["latency"], "tracker saw no partials"
+    finally:
+        eng.shutdown()

@@ -66,3 +66,121 @@ def test_output_sorted_and_deduped():
         assert (np.diff(row_s[valid]) <= 1e-6).all()
         # -1 padding is a suffix
         assert not np.any(np.diff(valid.astype(int)) > 0)
+
+
+# ---------------------------------------------------------------------------
+# adversarial id-collision / tie-distance cases (deterministic)
+# ---------------------------------------------------------------------------
+
+
+def _three_way(scores, ids, k):
+    """Run all three implementations, assert exact parity, return one.
+
+    For k > m the inputs are padded with (-inf, -1) exactly as
+    ``ops.merge_topk`` does before dispatching (the kernel and the jnp
+    oracle both require k <= m)."""
+    if k > scores.shape[1]:
+        pad = k - scores.shape[1]
+        scores = np.pad(scores, ((0, 0), (0, pad)),
+                        constant_values=-np.inf)
+        ids = np.pad(ids, ((0, 0), (0, pad)), constant_values=-1)
+    s_k, i_k = merge_topk_pallas(jnp.asarray(scores), jnp.asarray(ids),
+                                 k=k, interpret=True)
+    s_r, i_r = merge_topk_ref(jnp.asarray(scores), jnp.asarray(ids), k=k)
+    s_n, i_n = merge_topk_np(scores, ids, k=k)
+    np.testing.assert_array_equal(np.asarray(i_k), np.asarray(i_r))
+    np.testing.assert_array_equal(np.asarray(i_r), i_n)
+    valid = i_n >= 0
+    np.testing.assert_allclose(np.asarray(s_k)[valid],
+                               np.asarray(s_r)[valid], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_r), s_n)
+    return s_n, i_n
+
+
+def test_single_id_row_all_tied():
+    # every slot is the same id at the same score: exactly one survives,
+    # and the tie breaks to position 0 in all three implementations
+    scores = np.full((1, 8), 2.5, np.float32)
+    ids = np.full((1, 8), 3, np.int32)
+    s, i = _three_way(scores, ids, k=4)
+    assert i[0].tolist() == [3, -1, -1, -1]
+    assert s[0][0] == 2.5
+
+
+def test_hedged_duplicate_partials_change_nothing():
+    """First-result-wins hedging can hand the coordinator the same
+    shard partial twice (identical ids AND scores). Merging with the
+    duplicate block appended must equal merging the original alone."""
+    scores, ids = _random_partials(6, 20, seed=3, n_ids=8)
+    dup_s = np.concatenate([scores, scores], axis=1)
+    dup_i = np.concatenate([ids, ids], axis=1)
+    s0, i0 = _three_way(scores, ids, k=7)
+    s1, i1 = _three_way(dup_s, dup_i, k=7)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_allclose(s0, s1)
+
+
+# ---------------------------------------------------------------------------
+# property-based: hypothesis-generated adversarial partials
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:       # container without hypothesis: the
+    given = None          # deterministic cases above still run
+
+if given is not None:
+
+    @st.composite
+    def partials(draw):
+        """Adversarial [b, m] partial lists: tiny id pool (forced
+        collisions), scores from a small integer lattice (forced ties),
+        and a sprinkle of invalid (-1, -inf) slots."""
+        b = draw(st.integers(1, 5))
+        m = draw(st.integers(1, 24))
+        n_ids = draw(st.integers(1, 6))
+        rows_ids = draw(st.lists(
+            st.lists(st.integers(0, n_ids - 1), min_size=m, max_size=m),
+            min_size=b, max_size=b))
+        rows_scores = draw(st.lists(
+            st.lists(st.integers(-4, 4), min_size=m, max_size=m),
+            min_size=b, max_size=b))
+        ids = np.asarray(rows_ids, np.int32)
+        scores = np.asarray(rows_scores, np.float32)
+        inv = np.asarray(draw(st.lists(
+            st.lists(st.booleans(), min_size=m, max_size=m),
+            min_size=b, max_size=b)))
+        ids[inv] = -1
+        scores[inv] = -np.inf
+        k = draw(st.integers(1, m + 3))   # k > m exercises padding
+        return scores, ids, k
+
+    @settings(max_examples=25, deadline=None)
+    @given(partials())
+    def test_property_three_way_parity(case):
+        scores, ids, k = case
+        s, i = _three_way(scores, ids, k)
+        for row_s, row_i in zip(s, i):
+            valid = row_i >= 0
+            # deduped, descending, -1/-inf padded as a suffix
+            assert len(set(row_i[valid].tolist())) == int(valid.sum())
+            assert (np.diff(row_s[valid]) <= 0).all()
+            assert not np.any(np.diff(valid.astype(int)) > 0)
+            assert np.isneginf(row_s[~valid]).all()
+
+    @settings(max_examples=25, deadline=None)
+    @given(partials(), st.integers(0, 2 ** 32 - 1))
+    def test_property_duplicate_partials_are_idempotent(case, seed):
+        """Appending a shuffled copy of the same partial block (the
+        hedged duplicate-delivery case) never changes the merge: the
+        best occurrence of every id wins regardless of arrival layout."""
+        scores, ids, k = case
+        perm = np.random.default_rng(seed).permutation(scores.shape[1])
+        dup_s = np.concatenate([scores, scores[:, perm]], axis=1)
+        dup_i = np.concatenate([ids, ids[:, perm]], axis=1)
+        s0, i0 = merge_topk_np(scores, ids, k=k)
+        s1, i1 = merge_topk_np(dup_s, dup_i, k=k)
+        np.testing.assert_array_equal(i0, i1)
+        np.testing.assert_allclose(s0, s1)
+        # and the duplicated layout still holds exact 3-way parity
+        _three_way(dup_s, dup_i, k)

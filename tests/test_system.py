@@ -10,6 +10,9 @@ from repro.core.meta_index import build_pyramid_index
 from repro.data.synthetic import clustered_vectors, query_set
 from repro.serving.engine import ServingEngine
 
+# full-pipeline module: runs in the slow CI lane, not the fast PR lane
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def system():

@@ -14,6 +14,9 @@ from repro.train.optimizer import (AdamWConfig, adamw_update, global_norm,
                                    init_opt_state, schedule)
 from repro.train.train_step import make_train_step, init_sharded
 
+# multi-arch training loops: slow CI lane, not the fast PR lane
+pytestmark = pytest.mark.slow
+
 
 def test_schedule_shape():
     cfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
