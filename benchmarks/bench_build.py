@@ -1,0 +1,134 @@
+"""Build-subsystem benchmark: parallel vs sequential construction, plus
+store publish/load costs (paper Sec. IV-A GraphConstructor / Fig. 14
+flavour — the figures the query-side benches don't cover).
+
+Measures, at ``--n 20000 --shards 8`` by default:
+
+  * sequential sub-HNSW build wall-clock (the seed-era path);
+  * parallel build wall-clock with a ``--workers`` process pool;
+  * the *determinism gate*: both builds are published to temp stores and
+    their manifest shard checksums compared — the parallel fan-out must
+    be bit-identical to the sequential loop (``--check-determinism``
+    exits non-zero on mismatch, which is what CI runs);
+  * store publish time, full load time, single-shard lazy load time, and
+    on-disk size.
+
+``--out`` writes one JSON row per configuration to ``BENCH_build.json``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+from benchmarks import common as C
+from repro.build import build_pyramid_index_parallel
+from repro.common.config import PyramidConfig
+from repro.store import IndexStore
+
+
+def _cfg(w, *, num_shards: int) -> PyramidConfig:
+    return PyramidConfig(
+        metric=w.metric, num_shards=num_shards,
+        meta_size=min(C.META_SIZE, max(num_shards, len(w.x) // 16)),
+        sample_size=min(len(w.x), 8_000), branching_factor=2,
+        max_degree=16, max_degree_upper=8, ef_construction=60,
+        ef_search=80, kmeans_iters=8, seed=0)
+
+
+def _manifest_checksums(store: IndexStore, vid: str):
+    m = store.reader(vid).manifest
+    return ([s["checksum"] for s in m["shards"]], m["meta"]["checksum"])
+
+
+def run(quick: bool = False, out: str | None = None, *,
+        n: int | None = None, shards: int = 8, workers: int = 4,
+        check_determinism: bool = False) -> list:
+    n = n or (4_000 if quick else C.N_ITEMS)
+    w = C.euclidean_workload(n=n)
+    cfg = _cfg(w, num_shards=shards)
+
+    t0 = time.perf_counter()
+    idx_seq = build_pyramid_index_parallel(w.x, cfg, workers=0)
+    seq_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    idx_par = build_pyramid_index_parallel(w.x, cfg, workers=workers)
+    par_s = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as tmp:
+        s_seq = IndexStore(f"{tmp}/seq")
+        s_par = IndexStore(f"{tmp}/par")
+        t0 = time.perf_counter()
+        v_seq = s_seq.publish(idx_seq)
+        publish_s = time.perf_counter() - t0
+        v_par = s_par.publish(idx_par)
+        seq_sums = _manifest_checksums(s_seq, v_seq)
+        par_sums = _manifest_checksums(s_par, v_par)
+        deterministic = seq_sums == par_sums
+        t0 = time.perf_counter()
+        s_seq.load()
+        load_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        s_seq.reader().load_shard(0)
+        load_shard_s = time.perf_counter() - t0
+        store_bytes = s_seq.version_bytes(v_seq)
+
+    sub_seq = idx_seq.build_stats["subgraphs_wall_s"]
+    sub_par = idx_par.build_stats["subgraphs_wall_s"]
+    row = {
+        "n": n, "d": w.x.shape[1], "shards": shards, "workers": workers,
+        "seq_build_s": round(seq_s, 3),
+        "par_build_s": round(par_s, 3),
+        # headline speedup compares the sub-HNSW stage only: it is the
+        # stage the pool parallelises AND it is jit-free — the total
+        # wall-clocks include one-time kmeans/assignment compiles that
+        # the second (parallel) build gets from a warm cache, which
+        # would flatter the pool
+        "speedup": round(sub_seq / max(sub_par, 1e-9), 3),
+        "total_speedup": round(seq_s / max(par_s, 1e-9), 3),
+        "shard_build_s": idx_par.build_stats["shard_build_s"],
+        "subgraphs_seq_s": sub_seq,
+        "subgraphs_par_s": sub_par,
+        "build_retries": idx_par.build_stats["build_retries"],
+        "publish_s": round(publish_s, 3),
+        "load_s": round(load_s, 3),
+        "load_shard_s": round(load_shard_s, 4),
+        "store_bytes": store_bytes,
+        "deterministic": bool(deterministic),
+    }
+    print(f"bench_build,n={n},shards={shards},workers={workers},"
+          f"seq={row['seq_build_s']}s,par={row['par_build_s']}s,"
+          f"speedup={row['speedup']}x,publish={row['publish_s']}s,"
+          f"load={row['load_s']}s,deterministic={deterministic}")
+    rows = [row]
+    if out:
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {out}")
+    if check_determinism and not deterministic:
+        print("DETERMINISM GATE FAILED: parallel build checksums differ "
+              "from sequential", file=sys.stderr)
+        sys.exit(1)
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--workers", type=int, default=4)
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--check-determinism", action="store_true",
+                    help="exit non-zero unless parallel == sequential "
+                         "manifest checksums")
+    args = ap.parse_args()
+    run(quick=args.quick, out=args.out, n=args.n, shards=args.shards,
+        workers=args.workers, check_determinism=args.check_determinism)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,12 +10,14 @@ import sys
 import time
 import traceback
 
-from benchmarks import (ablation_partitioner, fig5_access_rate,
-                        fig6_precision, fig7_throughput, fig8_latency,
-                        fig9_comparison, fig10_mips, fig11_scalability,
-                        fig12_straggler, fig13_failure, roofline)
+from benchmarks import (ablation_partitioner, bench_build,
+                        fig5_access_rate, fig6_precision, fig7_throughput,
+                        fig8_latency, fig9_comparison, fig10_mips,
+                        fig11_scalability, fig12_straggler, fig13_failure,
+                        roofline)
 
 SUITES = {
+    "build": bench_build.run,
     "fig5": fig5_access_rate.run,
     "fig6": fig6_precision.run,
     "fig7": fig7_throughput.run,

@@ -47,6 +47,23 @@ def main() -> None:
     print(f"top-3 neighbours of query 0: ids={ids[0, :3]} "
           f"scores={scores[0, :3]}")
 
+    # Persist it: publish a version into the on-disk store (atomic,
+    # checksummed — the paper's HDFS layer; API.md "Index build & store").
+    # Reloading answers bit-identically; post-publish add_items are
+    # journaled to the version's delta log and replayed on load, which
+    # is how a crashed serving engine recovers (ServingEngine.from_store).
+    import tempfile
+
+    from repro.store import IndexStore
+
+    with tempfile.TemporaryDirectory() as root:
+        store = IndexStore(root)
+        vid = store.publish(index)
+        reloaded = store.load()
+        ids2, _, _ = search_single_host(reloaded, queries, k=10)
+        print(f"published {vid}; reload parity: "
+              f"{bool(np.array_equal(ids, ids2))}")
+
 
 if __name__ == "__main__":
     main()

@@ -1,0 +1,21 @@
+"""Parallel Pyramid index construction (paper Sec. IV-A GraphConstructor).
+
+The paper builds sub-HNSWs *in parallel across the cluster*; this package
+is that layer for a single host: a build planner that runs the shared
+sample -> k-means -> meta-HNSW -> partition -> assignment stages once,
+then fans per-partition sub-HNSW construction out over a process pool
+with deterministic per-shard seeds — the parallel build is bit-identical
+to the sequential one (same :func:`repro.store` manifest checksums).
+
+    from repro.build import build_pyramid_index_parallel
+    index = build_pyramid_index_parallel(x, cfg, workers=4)
+"""
+from repro.build.planner import (BuildError, BuildPlan, ShardSpec,
+                                 build_pyramid_index_parallel,
+                                 build_subgraphs, plan_build, shard_specs)
+
+__all__ = [
+    "BuildError", "BuildPlan", "ShardSpec",
+    "build_pyramid_index_parallel", "build_subgraphs", "plan_build",
+    "shard_specs",
+]

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import dataclasses
 import logging
+import os
 import threading
 from typing import Callable, Dict, List, Optional
 
@@ -32,8 +33,8 @@ import numpy as np
 from repro.common.config import PyramidConfig
 from repro.core.client import (PyramidClient, SearchFuture,  # noqa: F401
                                gather)
-from repro.core.meta_index import PyramidIndex, build_pyramid_index
-from repro.launch.build_index import load_index, save_index
+from repro.core.meta_index import PyramidIndex
+from repro.launch.build_index import load_index
 from repro.serving.engine import QueryResult, ServingEngine
 
 logger = logging.getLogger(__name__)
@@ -56,6 +57,7 @@ class BuildPara:
     replication_r: int = 0          # r (MIPS, Alg. 5)
     max_degree: int = 32
     ef_construction: int = 100
+    workers: int = 0                # >1: process-pool sub-HNSW fan-out
 
 
 def _check_metric(index: PyramidIndex, metric: str) -> None:
@@ -138,7 +140,7 @@ class Brokers:
             return self._engines[name]
 
     def replace_index(self, name: str,
-                      index: PyramidIndex) -> Optional[ServingEngine]:
+                      index) -> Optional[ServingEngine]:
         """Hot-swap ``name``'s engine onto a freshly built index (the
         paper's ``refresh()`` notification). The replacement engine is
         started *before* the old one is torn down — carrying over the
@@ -146,10 +148,23 @@ class Brokers:
         may have grown past the constructor setting) — and clients
         opened via :meth:`open_client` resolve it on their next call.
 
+        ``index`` may be a built :class:`PyramidIndex` or a *store
+        path*: a ``str``/``PathLike`` is opened as a
+        :class:`repro.store.IndexStore` and its latest published version
+        (plus delta-log replay) becomes the replacement — the paper's
+        "constructor publishes to HDFS, serving layer refreshes" flow.
+
         If ``name`` has no running engine there is nothing to swap:
         returns ``None`` and the next ``open_client`` / ``engine_for``
         lazily starts on the fresh index (no engine is spawned for a
         dataset nobody is serving)."""
+        if isinstance(index, (str, os.PathLike)):
+            with self._lock:   # nothing to swap? don't pay a full store
+                running = name in self._engines   # load just to drop it
+            if not running:
+                return None
+            from repro.store import IndexStore
+            index = IndexStore(str(index)).load()
         with self._lock:
             old = self._engines.get(name)
         if old is None:
@@ -295,7 +310,14 @@ class Executor:
 
 
 class GraphConstructor:
-    """Listing 3. Builds (and refreshes) the meta-HNSW + sub-HNSWs."""
+    """Listing 3. Builds (and refreshes) the meta-HNSW + sub-HNSWs.
+
+    The paper's constructor builds sub-HNSWs in parallel across the
+    cluster and persists them to shared storage; here ``para.workers``
+    fans the per-partition builds over a process pool
+    (:func:`repro.build.build_pyramid_index_parallel`, bit-identical to
+    sequential) and ``build_graphs`` publishes a version into the
+    :class:`repro.store.IndexStore` at ``out_path``."""
 
     def __init__(self, data: np.ndarray, metric: str, out_path: str):
         self.data = data
@@ -304,6 +326,7 @@ class GraphConstructor:
         self._index: Optional[PyramidIndex] = None
 
     def build_graphs(self, para: BuildPara) -> PyramidIndex:
+        from repro.build import build_pyramid_index_parallel
         cfg = PyramidConfig(
             metric=self.metric, num_shards=para.num_shards,
             meta_size=para.meta_size,
@@ -312,8 +335,10 @@ class GraphConstructor:
             max_degree_upper=max(para.max_degree // 2, 4),
             ef_construction=para.ef_construction,
             replication_r=para.replication_r)
-        self._index = build_pyramid_index(self.data, cfg)
-        save_index(self._index, self.out_path)
+        self._index = build_pyramid_index_parallel(
+            self.data, cfg, workers=para.workers)
+        from repro.store import IndexStore
+        IndexStore(self.out_path).publish(self._index)
         return self._index
 
     def refresh(self, new_data: np.ndarray, para: BuildPara,

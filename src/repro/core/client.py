@@ -33,6 +33,14 @@ Design notes:
 The module deliberately does not import the serving engine: the client is
 duck-typed over any object with ``submit / scale / stats / shutdown``,
 which keeps ``core`` free of a runtime dependency on ``serving``.
+
+Persistence: clients bound through ``Brokers.open_client(name, path)``
+accept a ``repro.store.IndexStore`` root as ``path`` (the versioned,
+checksummed replacement for the deprecated pickle format, see API.md
+"Index build & store"); ``Brokers.replace_index(name, path)`` hot-swaps
+the serving engine onto the latest published version, and a session
+keeps working across the swap — futures resolve against whichever
+engine completed them.
 """
 from __future__ import annotations
 

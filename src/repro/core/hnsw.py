@@ -32,6 +32,16 @@ from repro.core import metrics as M
 NEG_INF = np.float32(-np.inf)
 
 
+def shard_seed(base: int, shard: int) -> int:
+    """Construction seed for sub-HNSW ``shard`` of an index seeded with
+    ``base``. Every path that (re)builds a shard — the sequential build,
+    the process-pool fan-out (``repro.build``), and incremental rebuilds
+    (``repro.core.updates``) — must derive its seed here, so a shard's
+    graph is bit-identical no matter which path produced it (the store's
+    manifest checksums depend on it)."""
+    return base + 1 + shard
+
+
 # ---------------------------------------------------------------------------
 # Graph container
 # ---------------------------------------------------------------------------

@@ -24,11 +24,64 @@ from repro.common.jax_compat import shard_map
 from repro.kernels.topk_distance import topk_similarity
 
 
-def _init_centers(x: jnp.ndarray, m: int, seed: int) -> jnp.ndarray:
-    """k-means++ style seeding, simplified: random distinct rows."""
+def _init_centers(x: jnp.ndarray, m: int, seed: int, *,
+                  method: str = "uniform") -> jnp.ndarray:
+    """Initial centers.
+
+    ``method="uniform"`` (the default) samples m *uniform random
+    distinct* rows — it is NOT k-means++ (an older docstring overclaimed
+    this). ``method="kmeans++"`` runs true D²-weighted seeding (Arthur &
+    Vassilvitskii 2007): each next center is drawn with probability
+    proportional to its squared distance from the nearest center so far.
+
+    When ``m > n`` (more centers than rows — tiny samples do this)
+    distinct sampling is impossible: all n rows are used and the
+    remaining ``m - n`` slots are topped up with replacement so callers
+    always get m centers (``_finish_update`` keeps duplicate/empty
+    centers stable during iteration).
+    """
+    n = x.shape[0]
     key = jax.random.PRNGKey(seed)
-    idx = jax.random.choice(key, x.shape[0], shape=(m,), replace=False)
+    if method == "kmeans++":
+        return _kmeanspp_init(x, m, key)
+    if method != "uniform":
+        raise ValueError(f"unknown init method {method!r}; "
+                         "one of ('uniform', 'kmeans++')")
+    if m > n:
+        k1, k2 = jax.random.split(key)
+        idx = jnp.concatenate([
+            jax.random.permutation(k1, n),
+            jax.random.choice(k2, n, shape=(m - n,), replace=True)])
+    else:
+        idx = jax.random.choice(key, n, shape=(m,), replace=False)
     return x[idx]
+
+
+def _kmeanspp_init(x: jnp.ndarray, m: int, key) -> jnp.ndarray:
+    """True k-means++ (D² sampling). O(m·n·d) — same complexity class as
+    one Lloyd iteration, so enabling it roughly costs one extra iter."""
+    n, d = x.shape
+    key, k0 = jax.random.split(key)
+    first = jax.random.randint(k0, (), 0, n)
+    centers = jnp.zeros((m, d), x.dtype).at[0].set(x[first])
+    d2 = jnp.sum((x - x[first]) ** 2, axis=-1)
+
+    def body(i, state):
+        centers, d2, key = state
+        key, kk = jax.random.split(key)
+        total = jnp.sum(d2)
+        # all-zero D² (m > #distinct rows): fall back to uniform so the
+        # draw stays well-defined instead of dividing by zero
+        probs = jnp.where(total > 0, d2 / jnp.maximum(total, 1e-30),
+                          jnp.full((n,), 1.0 / n, x.dtype))
+        idx = jax.random.choice(kk, n, p=probs)
+        c = x[idx]
+        centers = centers.at[i].set(c)
+        d2 = jnp.minimum(d2, jnp.sum((x - c) ** 2, axis=-1))
+        return centers, d2, key
+
+    centers, _, _ = jax.lax.fori_loop(1, m, body, (centers, d2, key))
+    return centers
 
 
 def _assign(x: jnp.ndarray, centers: jnp.ndarray, metric: str) -> jnp.ndarray:
@@ -66,22 +119,29 @@ def _kmeans_jit(x, init_centers, *, m, iters, spherical):
 
 
 def kmeans(x: np.ndarray, m: int, *, iters: int = 12, spherical: bool = False,
-           seed: int = 0) -> Tuple[np.ndarray, np.ndarray]:
-    """Returns (centers [m, d] f32, counts [m] — size of each cluster)."""
+           seed: int = 0, init: str = "uniform"
+           ) -> Tuple[np.ndarray, np.ndarray]:
+    """Returns (centers [m, d] f32, counts [m] — size of each cluster).
+
+    ``init`` selects the seeding: ``"uniform"`` (distinct random rows)
+    or ``"kmeans++"`` (D²-weighted, see :func:`_init_centers`).
+    """
     x = jnp.asarray(x, jnp.float32)
     if spherical:
         x = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-12)
-    init = _init_centers(x, m, seed)
+    centers0 = _init_centers(x, m, seed, method=init)
     if spherical:
-        init = init / (jnp.linalg.norm(init, axis=-1, keepdims=True) + 1e-12)
-    centers, counts = _kmeans_jit(x, init, m=m, iters=iters,
+        centers0 = centers0 / (
+            jnp.linalg.norm(centers0, axis=-1, keepdims=True) + 1e-12)
+    centers, counts = _kmeans_jit(x, centers0, m=m, iters=iters,
                                   spherical=spherical)
     return np.asarray(centers), np.asarray(counts)
 
 
 def kmeans_distributed(x_global: jnp.ndarray, m: int, mesh: Mesh, *,
                        data_axis: str = "data", iters: int = 12,
-                       spherical: bool = False, seed: int = 0):
+                       spherical: bool = False, seed: int = 0,
+                       init: str = "uniform"):
     """Distributed k-means: rows sharded over ``data_axis``.
 
     Per iteration each shard computes local assignments and psums the
@@ -91,7 +151,7 @@ def kmeans_distributed(x_global: jnp.ndarray, m: int, mesh: Mesh, *,
     if spherical:
         x_global = x_global / (
             jnp.linalg.norm(x_global, axis=-1, keepdims=True) + 1e-12)
-    init = _init_centers(x_global, m, seed)
+    init = _init_centers(x_global, m, seed, method=init)
     if spherical:
         init = init / (jnp.linalg.norm(init, axis=-1, keepdims=True) + 1e-12)
 

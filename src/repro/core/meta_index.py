@@ -18,10 +18,6 @@ import jax.numpy as jnp
 
 from repro.common.config import PyramidConfig
 from repro.core import hnsw as H
-from repro.core import metrics as M
-from repro.core.kmeans import kmeans
-from repro.core.partition import balance_stats, edge_cut, partition_graph
-from repro.kernels.topk_distance import topk_similarity
 
 
 @dataclasses.dataclass
@@ -67,11 +63,23 @@ class PyramidIndex:
         self._arena = None
         self._meta_arrays = None
 
+    def delta_log(self):
+        """The append-only insert journal this index is attached to, or
+        ``None``. Set by :class:`repro.store.IndexStore` on publish/load;
+        ``repro.core.updates.add_items`` writes through it so inserts
+        survive a restart (replayed by ``IndexStore.load``)."""
+        return getattr(self, "_delta_log", None)
+
+    def attach_delta_log(self, log) -> None:
+        self._delta_log = log
+
     def __getstate__(self):
-        # device caches are derived data: never pickled (save_index)
+        # device caches and the store attachment are derived/runtime
+        # state: never pickled (legacy save_index) nor persisted
         state = dict(self.__dict__)
         state.pop("_arena", None)
         state.pop("_meta_arrays", None)
+        state.pop("_delta_log", None)
         return state
 
 
@@ -98,7 +106,13 @@ def _assign_items(x: np.ndarray, meta_arrays: H.HNSWArrays,
 def build_pyramid_index(x: np.ndarray, cfg: PyramidConfig, *,
                         sample_queries: Optional[np.ndarray] = None,
                         verbose: bool = False) -> PyramidIndex:
-    """Builds the full two-level Pyramid index (Alg. 3 / Alg. 5).
+    """Builds the full two-level Pyramid index (Alg. 3 / Alg. 5),
+    sequentially.
+
+    Thin wrapper over the staged builder in :mod:`repro.build` with the
+    sub-HNSW fan-out pinned to the in-process sequential path; use
+    :func:`repro.build.build_pyramid_index_parallel` to spread the
+    per-partition builds over a process pool (bit-identical result).
 
     Args:
       x: [n, d] dataset (raw; normalised internally for angular).
@@ -107,85 +121,6 @@ def build_pyramid_index(x: np.ndarray, cfg: PyramidConfig, *,
         result frequency instead of cluster sizes (hot-item load balancing,
         Sec. III-A).
     """
-    rng = np.random.default_rng(cfg.seed)
-    x = M.preprocess_dataset(x, cfg.metric)
-    n, d = x.shape
-    m = min(cfg.meta_size, max(cfg.num_shards, n // 4))
-    stats: dict = {"n": n, "d": d, "m": m, "w": cfg.num_shards}
-
-    # -- Alg. 3 lines 3-5 / Alg. 5 lines 3-6: sample, kmeans, meta-HNSW ----
-    sample = _sample(x, cfg.sample_size, rng)
-    spherical = cfg.is_mips
-    centers, counts = kmeans(sample, m, iters=cfg.kmeans_iters,
-                             spherical=spherical, seed=cfg.seed)
-    meta_metric = "ip" if cfg.is_mips else cfg.metric
-    meta = H.build_hnsw(centers, metric=meta_metric,
-                        max_degree=cfg.max_degree,
-                        max_degree_upper=cfg.max_degree_upper,
-                        ef_construction=cfg.ef_construction, seed=cfg.seed)
-
-    # -- center weights: cluster sizes (or query-frequency when provided) --
-    if sample_queries is not None:
-        k_hot = 10
-        ids, _ = H.search_numpy(meta, sample_queries, k=k_hot,
-                                ef=cfg.ef_search)
-        weights = np.bincount(ids[ids >= 0].reshape(-1), minlength=m) + 1.0
-    else:
-        weights = np.asarray(counts, dtype=np.float64) + 1.0
-
-    # -- Alg. 3 line 6: balanced min-cut partition of the bottom layer -----
-    part_of_center = partition_graph(
-        meta.neighbors[0], weights, cfg.num_shards, seed=cfg.seed)
-    stats["edge_cut"] = edge_cut(meta.neighbors[0], part_of_center)
-    stats["balance"], stats["part_weights"] = balance_stats(
-        weights, part_of_center, cfg.num_shards)
-
-    # -- Alg. 3 lines 7-10: assign every item to a sub-dataset -------------
-    meta_arrays = meta.device_arrays()
-    item_part = _assign_items(x, meta_arrays, part_of_center, meta_metric)
-
-    sub_ids: List[np.ndarray] = [
-        np.where(item_part == i)[0] for i in range(cfg.num_shards)]
-
-    # -- Alg. 5 lines 12-15: MIPS norm-replication -------------------------
-    replicated = 0
-    if cfg.is_mips and cfg.replication_r > 0:
-        r = min(cfg.replication_r, n)
-        # top-r MIPS neighbours of every meta vertex in the full dataset;
-        # blocked Pallas scan (the paper suggests LSH here; exact scan is
-        # affordable at our scale and strictly more faithful to recall).
-        _, top_r = topk_similarity(
-            jnp.asarray(centers), jnp.asarray(x), k=r, metric="ip")
-        top_r = np.asarray(top_r)
-        extra: List[set] = [set() for _ in range(cfg.num_shards)]
-        for c in range(m):
-            extra[part_of_center[c]].update(top_r[c].tolist())
-        for i in range(cfg.num_shards):
-            base = set(sub_ids[i].tolist())
-            add = np.fromiter((v for v in extra[i] if v not in base),
-                              dtype=np.int64, count=-1)
-            replicated += add.size
-            if add.size:
-                sub_ids[i] = np.concatenate([sub_ids[i], add])
-    stats["replicated_items"] = replicated
-    stats["total_stored"] = int(sum(s.size for s in sub_ids))
-
-    # -- Alg. 3 lines 11-12: build sub-HNSWs -------------------------------
-    subs: List[H.HNSWGraph] = []
-    for i in range(cfg.num_shards):
-        ids_i = sub_ids[i]
-        if ids_i.size == 0:  # degenerate partition: give it one random item
-            ids_i = rng.choice(n, size=1)
-            sub_ids[i] = ids_i
-        sub = H.build_hnsw(
-            x[ids_i], metric=meta_metric, max_degree=cfg.max_degree,
-            max_degree_upper=cfg.max_degree_upper,
-            ef_construction=cfg.ef_construction, seed=cfg.seed + 1 + i,
-            ids=ids_i)
-        subs.append(sub)
-    stats["sub_sizes"] = [int(s.size) for s in sub_ids]
-    if verbose:
-        print(f"[pyramid] build stats: {stats}")
-    return PyramidIndex(config=cfg, meta=meta,
-                        part_of_center=part_of_center.astype(np.int32),
-                        subs=subs, build_stats=stats)
+    from repro.build.planner import build_pyramid_index_parallel
+    return build_pyramid_index_parallel(
+        x, cfg, workers=0, sample_queries=sample_queries, verbose=verbose)

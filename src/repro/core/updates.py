@@ -9,10 +9,18 @@ meta-HNSW, partition labels and all untouched shards are reused.
 This keeps insert cost at O(|affected shards|) instead of O(w), which is
 the production middle ground between per-item graph insertion (hard to do
 well online) and the paper's full rebuild.
+
+Durability: when the index is attached to a published store version
+(``repro.store.IndexStore`` publish/load), every ``add_items`` call is
+journaled to that version's append-only delta log *after* it is applied,
+so inserts survive a restart — ``IndexStore.load`` replays the log
+through this same function (same ``shard_seed``, bit-identical rebuild).
+Removals are NOT journaled: publish a new version after ``remove_items``.
 """
 from __future__ import annotations
 
-from typing import List
+import logging
+from typing import List, Optional
 
 import numpy as np
 
@@ -20,9 +28,12 @@ from repro.core import hnsw as H
 from repro.core import metrics as M
 from repro.core.meta_index import PyramidIndex, _assign_items
 
+logger = logging.getLogger(__name__)
+
 
 def add_items(index: PyramidIndex, new_items: np.ndarray,
-              new_ids: np.ndarray = None) -> PyramidIndex:
+              new_ids: Optional[np.ndarray] = None, *,
+              log_delta: bool = True) -> PyramidIndex:
     """Insert ``new_items`` into an existing index (in place).
 
     Args:
@@ -30,15 +41,44 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
       new_items: [m, d] raw vectors (normalised internally for angular).
       new_ids: optional global ids; defaults to continuing after the
         current max id.
+      log_delta: journal this insert to the index's attached store delta
+        log (no-op when the index is not store-attached). The replay
+        path passes ``False`` — replaying must not re-journal.
 
     Returns the same index object with affected sub-HNSWs rebuilt.
     """
     cfg = index.config
+    log = index.delta_log() if log_delta else None
+    if log is not None:
+        # fail BEFORE mutating: if the journal can no longer accept
+        # records (its version was GC'd), raising after the in-memory
+        # apply would leave a half-committed state a retry duplicates
+        log.ensure_writable()
+    # cast BEFORE preprocessing: the delta journal stores float32, and
+    # replay must normalise the exact bytes the live apply normalised
+    # (angular preprocessing keeps the input dtype, so float64 input
+    # would otherwise round differently on replay)
+    new_items = np.asarray(new_items, np.float32)
     x = M.preprocess_dataset(new_items, cfg.metric)
     if new_ids is None:
-        cur_max = max(int(g.ids.max()) for g in index.subs)
+        # next free id = max over the non-empty shards (a skewed
+        # partition or remove_items can leave a zero-item shard whose
+        # ids.max() would raise) AND the persistent high-water mark —
+        # without the watermark, ids freed by an un-journaled
+        # remove_items would be reused, and delta replay onto the
+        # published state (where the removed item still exists) would
+        # alias one global id to two different vectors
+        occupied = [int(g.ids.max()) for g in index.subs if g.ids.size]
+        hwm = int(index.build_stats.get("max_assigned_id", -1))
+        cur_max = max(occupied + [hwm], default=-1)
         new_ids = np.arange(cur_max + 1, cur_max + 1 + x.shape[0],
                             dtype=np.int64)
+    else:
+        new_ids = np.asarray(new_ids, dtype=np.int64)
+    if new_ids.size:
+        index.build_stats["max_assigned_id"] = max(
+            int(index.build_stats.get("max_assigned_id", -1)),
+            int(new_ids.max()))
     metric = "ip" if cfg.is_mips else cfg.metric
 
     parts = _assign_items(x, index.meta_arrays(), index.part_of_center,
@@ -52,19 +92,41 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
         index.subs[s] = H.build_hnsw(
             data, metric=metric, max_degree=cfg.max_degree,
             max_degree_upper=cfg.max_degree_upper,
-            ef_construction=cfg.ef_construction, seed=cfg.seed + 1 + s,
-            ids=ids)
+            ef_construction=cfg.ef_construction,
+            seed=H.shard_seed(cfg.seed, s), ids=ids)
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
     index.invalidate_device_cache()   # subs changed: arena must rebuild
+    if log is not None:
+        # journal AFTER the in-memory apply (a crash mid-rebuild must
+        # not leave a committed record the memory state never saw),
+        # with the raw-but-f32 vectors + resolved ids: replay goes
+        # back through add_items itself, preprocessing included. If
+        # this append itself fails, the in-memory apply HAS happened —
+        # the exception signals lost durability, not a failed insert.
+        log.append(new_items, new_ids)
     return index
 
 
 def remove_items(index: PyramidIndex, remove_ids: np.ndarray
                  ) -> PyramidIndex:
-    """Delete items by global id; affected sub-HNSWs are rebuilt."""
+    """Delete items by global id; affected sub-HNSWs are rebuilt.
+
+    Not journaled: a store-attached index should publish a fresh version
+    after removals (the delta log only records inserts)."""
     cfg = index.config
     metric = "ip" if cfg.is_mips else cfg.metric
+    if index.delta_log() is not None:
+        logger.warning(
+            "remove_items on a store-attached index is not journaled: "
+            "publish a new version to persist the removal")
+    # pin the high-water mark BEFORE freeing ids: a later add_items must
+    # never hand a removed item's id to a new vector (delta replay onto
+    # the published state would alias the id to both)
+    occupied = [int(g.ids.max()) for g in index.subs if g.ids.size]
+    index.build_stats["max_assigned_id"] = max(
+        occupied + [int(index.build_stats.get("max_assigned_id", -1))],
+        default=-1)
     to_remove = set(np.asarray(remove_ids).tolist())
     for s, old in enumerate(index.subs):
         keep = np.asarray([int(i) not in to_remove for i in old.ids])
@@ -75,8 +137,8 @@ def remove_items(index: PyramidIndex, remove_ids: np.ndarray
         index.subs[s] = H.build_hnsw(
             old.data[keep], metric=metric, max_degree=cfg.max_degree,
             max_degree_upper=cfg.max_degree_upper,
-            ef_construction=cfg.ef_construction, seed=cfg.seed + 1 + s,
-            ids=old.ids[keep])
+            ef_construction=cfg.ef_construction,
+            seed=H.shard_seed(cfg.seed, s), ids=old.ids[keep])
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
     index.invalidate_device_cache()   # subs changed: arena must rebuild

@@ -512,6 +512,25 @@ class ServingEngine:
 
     # -- lifecycle ---------------------------------------------------------
 
+    @classmethod
+    def from_store(cls, store_path: str, *, version: Optional[str] = None,
+                   replay_delta: bool = True, **engine_kw
+                   ) -> "ServingEngine":
+        """Recover an engine from a published :class:`repro.store.
+        IndexStore` version (default: the latest).
+
+        This is the crash-recovery path: an engine lost with its host
+        reopens the last *published* index and replays the version's
+        append-only delta log, so every ``add_items`` that happened
+        after the publish is served again — the recovered engine answers
+        within the usual recall tolerance of the pre-crash one (see
+        ``tests/test_store.py``).
+        """
+        from repro.store import IndexStore
+        index = IndexStore(store_path).load(
+            version=version, replay_delta=replay_delta)
+        return cls(index, **engine_kw)
+
     def _spawn(self, shard: int, replica: int) -> Executor:
         name = f"exec-s{shard}-r{replica}"
         ex = Executor(name, self.topics[shard], shard,

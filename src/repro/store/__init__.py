@@ -1,0 +1,33 @@
+"""Versioned on-disk index store (the paper's HDFS persistence layer).
+
+Replaces the seed-era monolithic ``pickle.dump`` with a publishable
+format a cluster can actually serve from:
+
+  * per-shard ``.npz`` segments + a meta segment + ``manifest.json``
+    (config, shard list, content checksums, version id);
+  * crash-safe atomic publish: segments are written to a tmpdir and the
+    whole version appears with one ``rename`` — readers never observe a
+    half-written version;
+  * lazy per-shard loading (:meth:`IndexStore.reader`) so an engine
+    executor can fetch only its shard;
+  * an append-only delta log that ``repro.core.updates.add_items``
+    writes through, replayed on load — inserts survive restarts;
+  * GC of superseded versions (:meth:`IndexStore.gc`).
+
+    from repro.store import IndexStore
+    store = IndexStore("/data/pyramid/wiki")
+    vid = store.publish(index)          # atomic; attaches the delta log
+    index = store.load()                # latest version + delta replay
+"""
+from repro.store.format import (StoreCorruptionError, StoreError,
+                                content_checksum, graph_from_arrays,
+                                graph_to_arrays, read_segment,
+                                write_segment)
+from repro.store.store import DeltaLog, IndexStore, StoreReader
+
+__all__ = [
+    "DeltaLog", "IndexStore", "StoreReader",
+    "StoreCorruptionError", "StoreError",
+    "content_checksum", "graph_from_arrays", "graph_to_arrays",
+    "read_segment", "write_segment",
+]

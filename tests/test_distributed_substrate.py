@@ -25,6 +25,40 @@ def test_kmeans_distributed_matches_single_host():
     np.testing.assert_array_equal(np.asarray(n_dist), n_single)
 
 
+def test_kmeans_more_centers_than_rows():
+    """Regression: ``m > n`` used to raise inside ``jax.random.choice(
+    replace=False)``; tiny samples must still yield m centers."""
+    x = clustered_vectors(5, 8, 2, seed=4)
+    centers, counts = kmeans(x, 8, iters=3, seed=0)
+    assert centers.shape == (8, 8)
+    assert np.isfinite(centers).all()
+    assert int(counts.sum()) == 5
+    # every row is represented among the centers (distinct-first fill)
+    d2 = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+    assert (d2.min(axis=1) < 1e-8).all()
+
+
+def test_kmeanspp_init_flag():
+    """True k-means++ seeding behind ``init="kmeans++"``: correct shape,
+    distinct centers, and no worse quantisation than uniform seeding on
+    well-separated clusters."""
+    x = clustered_vectors(1500, 8, 12, seed=5)
+
+    def inertia(centers):
+        d2 = ((x[:, None, :] - centers[None, :, :]) ** 2).sum(-1)
+        return float(d2.min(axis=1).mean())
+
+    c_pp, n_pp = kmeans(x, 12, iters=8, seed=1, init="kmeans++")
+    assert c_pp.shape == (12, 8)
+    assert len(np.unique(c_pp, axis=0)) == 12
+    assert int(n_pp.sum()) == 1500
+    c_uni, _ = kmeans(x, 12, iters=8, seed=1, init="uniform")
+    assert inertia(c_pp) <= inertia(c_uni) * 1.5
+
+    with pytest.raises(ValueError, match="unknown init"):
+        kmeans(x, 4, iters=2, seed=0, init="bogus")
+
+
 def test_spmd_search_multiple_shards_per_device():
     """w=8 shards on a 1-device model axis: the per-device shard loop."""
     x = clustered_vectors(3000, 16, 24, seed=1)

@@ -89,6 +89,63 @@ def test_remove_items_gone(small_index):
     assert not (set(ids.reshape(-1).tolist()) & set(victims.tolist()))
 
 
+def test_add_items_with_empty_shard(small_index):
+    """Regression: ``add_items`` used to crash computing the next free
+    id when any sub-HNSW was empty (``g.ids.max()`` on a zero-item
+    shard) — skewed partitions can legitimately produce one."""
+    from repro.core import hnsw as H
+    x, idx = small_index
+    d = x.shape[1]
+    m0 = idx.subs[0].neighbors[0].shape[1]
+    idx.subs[1] = H.HNSWGraph(
+        data=np.zeros((0, d), np.float32),
+        ids=np.zeros((0,), np.int64),
+        neighbors=[np.full((0, m0), -1, np.int32)],
+        levels=np.zeros((0,), np.int32), entry=-1, metric="l2")
+    idx.invalidate_device_cache()
+    # the max over the NON-empty shards (the emptied shard may have
+    # held the global max id — those ids are gone and may be reused)
+    start = max(int(g.ids.max()) for g in idx.subs if g.ids.size) + 1
+    new = clustered_vectors(30, 16, 4, seed=9)
+    add_items(idx, new)   # must not raise
+    stored = np.concatenate([g.ids for g in idx.subs])
+    assert set(range(start, start + 30)) <= set(stored.tolist())
+
+
+def test_add_items_all_shards_empty_starts_at_zero():
+    from repro.core import hnsw as H
+    from repro.common.config import PyramidConfig as PC
+    x = clustered_vectors(400, 8, 4, seed=11)
+    cfg = PC(metric="l2", num_shards=2, meta_size=16, sample_size=200,
+             branching_factor=1, max_degree=8, max_degree_upper=4,
+             ef_construction=20, ef_search=30, kmeans_iters=3)
+    idx = build_pyramid_index(x, cfg)
+    m0 = idx.subs[0].neighbors[0].shape[1]
+    for s in range(idx.num_shards):
+        idx.subs[s] = H.HNSWGraph(
+            data=np.zeros((0, 8), np.float32),
+            ids=np.zeros((0,), np.int64),
+            neighbors=[np.full((0, m0), -1, np.int32)],
+            levels=np.zeros((0,), np.int32), entry=-1, metric="l2")
+    idx.invalidate_device_cache()
+    add_items(idx, x[:10])
+    stored = np.concatenate([g.ids for g in idx.subs])
+    assert set(stored.tolist()) == set(range(10))
+
+
+def test_add_after_remove_does_not_reuse_freed_ids(small_index):
+    """Regression: ids freed by remove_items must not be handed to new
+    vectors — store delta replay applies inserts onto the *published*
+    state (removals are not journaled), so a reused id would alias two
+    different vectors after recovery."""
+    x, idx = small_index
+    remove_items(idx, np.arange(1990, 2000))
+    add_items(idx, clustered_vectors(5, 16, 2, seed=12))
+    stored = np.concatenate([g.ids for g in idx.subs])
+    new_ids = set(stored.tolist()) - set(range(2000))
+    assert new_ids == set(range(2000, 2005))
+
+
 def test_update_then_quality_holds(small_index):
     x, idx = small_index
     rng = np.random.default_rng(6)

@@ -1,0 +1,431 @@
+"""Versioned index store (repro.store): publish/load parity across all
+three metrics, checksum rejection, concurrent-publish atomicity, the
+pickle-migration shim, delta-log replay, GC — and store-backed engine
+crash recovery driven by a deterministic FaultSchedule."""
+import os
+import pickle
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+from repro.core.updates import add_items
+from repro.data.synthetic import (clustered_vectors, norm_spread_vectors,
+                                  query_set)
+from repro.store import IndexStore, StoreCorruptionError, StoreError
+
+
+def _cfg(metric):
+    return PyramidConfig(
+        metric=metric, num_shards=4, meta_size=32, sample_size=400,
+        branching_factor=2, max_degree=10, max_degree_upper=5,
+        ef_construction=30, ef_search=40, kmeans_iters=4,
+        replication_r=30 if metric == "ip" else 0)
+
+
+@pytest.fixture(scope="module")
+def built():
+    """(x, queries, index) per metric — built once for the module."""
+    out = {}
+    for metric in ("l2", "angular", "ip"):
+        if metric == "ip":
+            x = norm_spread_vectors(700, 12, 8, seed=2)
+            q = np.random.default_rng(3).normal(
+                size=(12, 12)).astype(np.float32)
+        else:
+            x = clustered_vectors(700, 12, 8, seed=0)
+            q = query_set(x, 12, seed=1)
+        out[metric] = (x, q, build_pyramid_index(x, _cfg(metric)))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# round-trip parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["l2", "angular", "ip"])
+def test_publish_load_search_parity(built, metric, tmp_path):
+    """Loaded index answers bit-identically to the in-memory one."""
+    x, q, index = built[metric]
+    store = IndexStore(str(tmp_path))
+    vid = store.publish(index)
+    assert store.latest() == vid
+    loaded = store.load()
+    assert loaded.config == index.config
+    np.testing.assert_array_equal(loaded.part_of_center,
+                                  index.part_of_center)
+    ids_a, sc_a, _ = search_single_host(index, q, k=5)
+    ids_b, sc_b, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sc_a, sc_b)
+
+
+def test_reader_lazy_shard_parity(built, tmp_path):
+    """An executor can fetch ONLY its shard — and gets the same graph."""
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    store.publish(index)
+    reader = store.reader()
+    assert reader.num_shards == index.num_shards
+    g = reader.load_shard(2)
+    np.testing.assert_array_equal(g.ids, index.subs[2].ids)
+    np.testing.assert_array_equal(g.data, index.subs[2].data)
+    assert g.entry == index.subs[2].entry
+    assert len(g.neighbors) == len(index.subs[2].neighbors)
+
+
+def test_empty_store_raises(tmp_path):
+    with pytest.raises(StoreError, match="no published"):
+        IndexStore(str(tmp_path)).load()
+
+
+# ---------------------------------------------------------------------------
+# corruption & atomicity
+# ---------------------------------------------------------------------------
+
+
+def test_corrupted_segment_is_rejected(built, tmp_path):
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    vid = store.publish(index)
+    seg = os.path.join(store.version_dir(vid), "shard-0001.npz")
+    blob = bytearray(open(seg, "rb").read())
+    mid = len(blob) // 2
+    blob[mid:mid + 64] = bytes(b ^ 0xFF for b in blob[mid:mid + 64])
+    with open(seg, "wb") as f:
+        f.write(blob)
+    with pytest.raises(StoreCorruptionError):
+        store.load()
+    # other shards still load lazily; only the stomped one rejects
+    reader = store.reader()
+    reader.load_shard(0)
+    with pytest.raises(StoreCorruptionError):
+        reader.load_shard(1)
+
+
+def test_concurrent_publish_atomicity(built, tmp_path):
+    """Two racing publishers both land complete, distinct versions."""
+    _, q, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    barrier = threading.Barrier(2)
+    got, errs = [], []
+
+    def publisher():
+        try:
+            barrier.wait(timeout=30)
+            got.append(IndexStore(str(tmp_path)).publish(index))
+        except Exception as e:   # pragma: no cover - failure detail
+            errs.append(e)
+
+    ts = [threading.Thread(target=publisher) for _ in range(2)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join(timeout=60)
+    assert not errs
+    assert len(set(got)) == 2            # distinct version ids claimed
+    assert sorted(store.versions()) == sorted(got)
+    assert store.latest() in got         # CURRENT points at a winner
+    loaded = store.load()                # and it is complete
+    ids_a, _, _ = search_single_host(index, q, k=5)
+    ids_b, _, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    # no half-written tmpdirs left behind
+    assert not [n for n in os.listdir(str(tmp_path))
+                if n.startswith(".tmp-")]
+
+
+def test_pickle_migration_shim(built, tmp_path):
+    """Seed-era ``index.pkl`` dirs still load (with a deprecation
+    warning), and ``save_index`` now publishes store versions."""
+    from repro.launch.build_index import load_index, save_index
+    x, q, index = built["l2"]
+    legacy = tmp_path / "legacy"
+    legacy.mkdir()
+    with open(legacy / "index.pkl", "wb") as f:
+        pickle.dump(index, f)
+    with pytest.warns(DeprecationWarning, match="legacy pickle"):
+        loaded = load_index(str(legacy))
+    ids_a, _, _ = search_single_host(index, q, k=5)
+    ids_b, _, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    # the deprecated writer produces the NEW format
+    with pytest.warns(DeprecationWarning, match="save_index"):
+        save_index(index, str(tmp_path / "migrated"))
+    assert IndexStore(str(tmp_path / "migrated")).versions()
+    ids_c, _, _ = search_single_host(
+        load_index(str(tmp_path / "migrated")), q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_c)
+    # save/load round-trip ON the legacy dir must return the fresh
+    # publish, never the stale pickle (which is moved aside)
+    fresh = build_pyramid_index(x + 25.0, _cfg("l2"))
+    with pytest.warns(DeprecationWarning, match="save_index"):
+        save_index(fresh, str(legacy))
+    assert not (legacy / "index.pkl").exists()
+    reloaded = load_index(str(legacy))
+    np.testing.assert_array_equal(
+        reloaded.subs[0].data, fresh.subs[0].data)
+
+
+# ---------------------------------------------------------------------------
+# delta log
+# ---------------------------------------------------------------------------
+
+
+def test_delta_log_replay_parity(built, tmp_path):
+    """Post-publish inserts are journaled and replayed on load — the
+    reloaded index is bit-identical to the in-memory one."""
+    x, q, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    store.publish(index)
+    assert index.delta_log() is not None
+    extra = clustered_vectors(40, 12, 4, seed=9)
+    add_items(index, extra)
+    extra2 = clustered_vectors(16, 12, 2, seed=10)
+    add_items(index, extra2)
+    assert len(index.delta_log()) == 2
+    loaded = store.load()
+    ids_a, sc_a, _ = search_single_host(index, q, k=5)
+    ids_b, sc_b, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sc_a, sc_b)
+    # the inserted ids are really in the reloaded index
+    all_ids = np.concatenate([g.ids for g in loaded.subs])
+    assert int(all_ids.max()) >= len(x) + len(extra) + len(extra2) - 1
+    # replay does not re-journal: the log is still 2 records long
+    assert len(loaded.delta_log()) == 2
+
+
+def test_uncommitted_delta_record_is_ignored(built, tmp_path):
+    """A crash between record write and LOG append leaves an orphan
+    file; replay must skip it (the LOG line is the commit point)."""
+    _, q, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    vid = store.publish(index)
+    delta_dir = os.path.join(store.version_dir(vid), "delta")
+    os.makedirs(delta_dir, exist_ok=True)
+    np.savez(os.path.join(delta_dir, "d000001.npz"),
+             vectors=np.zeros((3, 12), np.float32),
+             ids=np.arange(3, dtype=np.int64))   # never committed
+    loaded = store.load()
+    ids_a, _, _ = search_single_host(index, q, k=5)
+    ids_b, _, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    # the next committed append must not collide with the orphan name
+    add_items(index, clustered_vectors(8, 12, 2, seed=12))
+    assert len(index.delta_log()) == 1
+    store.load()   # replays cleanly
+
+
+def test_torn_log_tail_is_healed_on_next_append(built, tmp_path):
+    """A crash can tear the LOG's final line; the next append must not
+    glue its record onto the fragment (which would silently drop a
+    committed insert from every future replay)."""
+    _, q, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    vid = store.publish(index)
+    add_items(index, clustered_vectors(10, 12, 2, seed=13))
+    log_path = os.path.join(store.version_dir(vid), "delta", "LOG")
+    with open(log_path, "a") as f:
+        f.write('{"file": "d9')   # torn fragment, no trailing newline
+    index.delta_log()._count = None   # fresh process: no cached count
+    add_items(index, clustered_vectors(6, 12, 2, seed=14))
+    assert len(index.delta_log()) == 2   # both records committed
+    loaded = store.load()
+    ids_a, _, _ = search_single_host(index, q, k=5)
+    ids_b, _, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+
+
+def test_delta_replay_parity_float64_angular(tmp_path):
+    """Regression: float64 input on an angular index must replay
+    bit-identically (the journal stores float32 — the apply path has to
+    cast before normalising, not after)."""
+    x = clustered_vectors(500, 12, 6, seed=21)
+    index = build_pyramid_index(x, _cfg("angular"))
+    store = IndexStore(str(tmp_path))
+    store.publish(index)
+    extra = np.random.default_rng(5).normal(size=(20, 12))   # float64
+    add_items(index, extra)
+    loaded = store.load()
+    q = query_set(x, 10, seed=22)
+    ids_a, sc_a, _ = search_single_host(index, q, k=5)
+    ids_b, sc_b, _ = search_single_host(loaded, q, k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+    np.testing.assert_array_equal(sc_a, sc_b)
+
+
+def test_newlineless_tail_is_uncommitted_everywhere(built, tmp_path):
+    """The trailing newline is THE commit point: a crash that persists
+    a parseable line without its newline must be treated as uncommitted
+    by replay AND by the healer — never replayed once then erased."""
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    vid = store.publish(index)
+    add_items(index, clustered_vectors(8, 12, 2, seed=30))
+    log_path = os.path.join(store.version_dir(vid), "delta", "LOG")
+    with open(log_path, "rb") as f:
+        body = f.read()
+    with open(log_path, "wb") as f:
+        f.write(body.rstrip(b"\n"))   # the crash ate the newline
+    assert len(store.reader().delta_log()) == 0   # not committed
+    idx2 = store.load()               # replays nothing — consistent
+    add_items(idx2, clustered_vectors(4, 12, 2, seed=31))
+    assert len(idx2.delta_log()) == 1   # healed tail + one new record
+    again = store.load()
+    ids_a, _, _ = search_single_host(idx2, query_set(
+        np.asarray(idx2.subs[0].data), 6, seed=32), k=5)
+    ids_b, _, _ = search_single_host(again, query_set(
+        np.asarray(idx2.subs[0].data), 6, seed=32), k=5)
+    np.testing.assert_array_equal(ids_a, ids_b)
+
+
+def test_append_to_gcd_version_fails_loudly(built, tmp_path):
+    """An index attached to a version that GC deleted must not journal
+    ghost records into a recreated directory nothing can replay."""
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    store.publish(index)              # index attached to v1's log
+    idx2 = store.load()
+    store.publish(idx2)               # v2 published
+    store.gc(keep=1)                  # v1 deleted
+    with pytest.raises(StoreError, match="gone"):
+        add_items(index, clustered_vectors(5, 12, 2, seed=33))
+    assert len(store.versions()) == 1   # no ghost v1 dir resurrected
+
+
+# ---------------------------------------------------------------------------
+# versioning & GC
+# ---------------------------------------------------------------------------
+
+
+def test_gc_keeps_current_and_newest(built, tmp_path):
+    _, q, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    vids = [store.publish(index) for _ in range(3)]
+    assert store.versions() == vids
+    removed = store.gc(keep=1)
+    assert removed == vids[:2]
+    assert store.versions() == [vids[-1]]
+    assert store.latest() == vids[-1]
+    store.load()
+    with pytest.raises(ValueError):
+        store.gc(keep=0)
+
+
+def test_publish_keep_runs_gc(built, tmp_path):
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    for _ in range(3):
+        store.publish(index, keep=2)
+    assert len(store.versions()) == 2
+
+
+def test_gc_spares_fresh_tmpdirs(built, tmp_path):
+    """A fresh ``.tmp-`` dir may be a concurrent publish still writing;
+    gc must only sweep STALE orphans."""
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    store.publish(index)
+    fresh = tmp_path / ".tmp-inflight"
+    fresh.mkdir()
+    stale = tmp_path / ".tmp-crashed"
+    stale.mkdir()
+    old = time.time() - 2 * IndexStore.ORPHAN_GRACE_S
+    os.utime(stale, (old, old))
+    store.gc(keep=1)
+    assert fresh.exists(), "gc deleted a possibly-live publish tmpdir"
+    assert not stale.exists(), "gc left a stale crash orphan"
+
+
+def test_current_flip_is_newest_wins(built, tmp_path):
+    """A publisher descheduled between claiming its version and flipping
+    CURRENT must not roll CURRENT back over a newer publish."""
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    v1 = store.publish(index)
+    v2 = store.publish(index)
+    assert store.latest() == v2
+    store._set_current(v1)   # the late, stale flip
+    assert store.latest() == v2
+
+
+def test_latest_falls_back_without_current(built, tmp_path):
+    """Crash between the version rename and the CURRENT flip: the
+    publish must still be discoverable."""
+    _, _, index = built["l2"]
+    store = IndexStore(str(tmp_path))
+    vid = store.publish(index)
+    os.remove(os.path.join(str(tmp_path), "CURRENT"))
+    assert store.latest() == vid
+    store.load()
+
+
+# ---------------------------------------------------------------------------
+# engine crash recovery (deterministic FaultSchedule, ROADMAP testing guide)
+# ---------------------------------------------------------------------------
+
+
+def _recall(results, queries, corpus, k=10):
+    true_ids, _ = M.brute_force_topk(queries, corpus, k, "l2")
+    hits = sum(len(set(r.ids.tolist()) & set(true_ids[i].tolist()))
+               for i, r in enumerate(results))
+    return hits / true_ids.size
+
+
+@pytest.mark.faults
+def test_engine_crash_recovers_from_store(tmp_path):
+    """The acceptance scenario: publish -> serve (through a scripted
+    mid-batch kill storm) -> hard crash -> ``ServingEngine.from_store``
+    reopens the published version, replays the post-publish delta log,
+    and answers within 2% recall of the pre-crash engine."""
+    from repro.serving.engine import ServingEngine
+    from repro.serving.faults import FaultEvent, FaultSchedule
+
+    x = clustered_vectors(1200, 12, 10, seed=0)
+    index = build_pyramid_index(x, _cfg("l2"))
+    store = IndexStore(str(tmp_path / "store"))
+    store.publish(index)
+
+    # post-publish inserts ride the delta log, not a new version
+    extra = clustered_vectors(60, 12, 4, seed=7)
+    add_items(index, extra)
+    corpus = np.concatenate([x, extra])
+    q = query_set(corpus, 32, seed=11)
+
+    storm = FaultSchedule([
+        FaultEvent(step=2, action="kill", target="exec-s*-r0"),
+    ])
+    eng = ServingEngine(index, replicas=2, executor_batch=4,
+                        fault_schedule=storm,
+                        monitor_opts={"backoff_base_s": 0.02,
+                                      "period_s": 0.05})
+    try:
+        futs = eng.submit(q, k=10)
+        pre = [f.result(timeout=60) for f in futs]
+        assert [r.query_id for r in pre] == [f.query_id for f in futs]
+        assert storm.done()
+    finally:
+        eng.shutdown()   # the crash: host gone, in-memory index lost
+    recall_pre = _recall(pre, q, corpus)
+
+    eng2 = ServingEngine.from_store(str(tmp_path / "store"), replicas=1)
+    try:
+        post = [f.result(timeout=60) for f in eng2.submit(q, k=10)]
+    finally:
+        eng2.shutdown()
+    recall_post = _recall(post, q, corpus)
+    assert abs(recall_post - recall_pre) <= 0.02, \
+        f"recovered recall {recall_post:.3f} vs pre-crash {recall_pre:.3f}"
+    # the delta-logged inserts survived the crash
+    recovered_ids = set()
+    for r in post:
+        recovered_ids.update(int(i) for i in r.ids)
+    assert any(i >= len(x) for i in recovered_ids), \
+        "no post-publish insert came back after recovery"
