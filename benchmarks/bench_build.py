@@ -105,7 +105,7 @@ def run(quick: bool = False, out: str | None = None, *,
           f"load={row['load_s']}s,deterministic={deterministic}")
     rows = [row]
     if out:
-        with open(out, "w") as f:
+        with open(C.ensure_parent(out), "w") as f:
             json.dump(rows, f, indent=1)
         print(f"wrote {out}")
     if check_determinism and not deterministic:

@@ -1,0 +1,179 @@
+"""CI perf/recall regression gate over ``BENCH_*.json`` artifacts.
+
+Diffs every freshly generated artifact in ``--fresh`` against the
+committed baseline copy (``--baseline``, default
+``benchmarks/baselines``) and fails (exit 1) when:
+
+  * any numeric leaf whose key contains ``recall`` dropped by more than
+    ``--recall-tol`` (absolute, default 0.02 = 2%);
+  * an artifact's AGGREGATE quick-mode QPS (sum over its ``qps`` leaves,
+    path-aligned) dropped below ``(1 - --qps-tol)`` of the baseline
+    (default 0.30 = 30%). Aggregating per artifact instead of per leaf
+    is deliberate: single quick-mode timings swing ~2x on shared 2-CPU
+    runners (see CHANGES.md PR 3), so one noisy straggler-share row must
+    not fail an honest run — a real regression moves the whole artifact.
+    Applied only when BOTH artifacts are quick-mode runs
+    (``"quick": true``); full-scale and quick numbers are not
+    comparable;
+  * a baseline artifact has no fresh counterpart (a benchmark silently
+    dropped out of CI), or a gated leaf vanished from the fresh payload.
+
+Leaves are aligned by JSON path (dict keys + list indices), so per-row
+tables (fig12 shares x modes, quant metrics) compare row-for-row.
+Improvements never fail the gate.
+
+Refreshing baselines (after an intentional perf/recall change)::
+
+    PYTHONPATH=src python -m benchmarks.bench_gate \\
+        --fresh fresh-bench --update-baselines
+
+which copies the fresh artifacts over ``benchmarks/baselines/`` —
+commit the result. The CI workflow documents the same flow.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Dict, Iterator, Tuple
+
+RECALL_TOL = 0.02
+QPS_TOL = 0.30
+
+
+def _numeric_leaves(obj, path: str = "") -> Iterator[Tuple[str, float]]:
+    if isinstance(obj, dict):
+        for key in sorted(obj):
+            yield from _numeric_leaves(obj[key], f"{path}/{key}")
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from _numeric_leaves(v, f"{path}[{i}]")
+    elif isinstance(obj, bool):
+        return
+    elif isinstance(obj, (int, float)):
+        yield path, float(obj)
+
+
+def _last_key(path: str) -> str:
+    return path.rsplit("/", 1)[-1].split("[")[0].lower()
+
+
+def _is_quick(payload) -> bool:
+    return isinstance(payload, dict) and payload.get("quick") is True
+
+
+def gate_file(name: str, baseline, fresh, *, recall_tol: float,
+              qps_tol: float) -> Tuple[list, list]:
+    """Returns (violations, notes) for one artifact pair."""
+    violations, notes = [], []
+    base_leaves: Dict[str, float] = dict(_numeric_leaves(baseline))
+    fresh_leaves: Dict[str, float] = dict(_numeric_leaves(fresh))
+    qps_comparable = _is_quick(baseline) and _is_quick(fresh)
+    qps_base_sum = qps_fresh_sum = 0.0
+    qps_count = 0
+    for path, base in sorted(base_leaves.items()):
+        key = _last_key(path)
+        is_recall = "recall" in key
+        is_qps = "qps" in key
+        if not (is_recall or is_qps):
+            continue
+        if path not in fresh_leaves:
+            violations.append(
+                f"{name}{path}: gated metric missing from fresh run")
+            continue
+        got = fresh_leaves[path]
+        if is_recall and got < base - recall_tol:
+            violations.append(
+                f"{name}{path}: recall {got:.4f} < baseline "
+                f"{base:.4f} - {recall_tol} (regression "
+                f"{base - got:.4f})")
+        elif is_qps:
+            qps_base_sum += base
+            qps_fresh_sum += got
+            qps_count += 1
+    if qps_count and not qps_comparable:
+        notes.append(
+            f"{name}: {qps_count} qps leaves not gated (artifacts are "
+            "not both quick-mode runs)")
+    elif (qps_count and qps_base_sum > 0
+            and qps_fresh_sum < (1.0 - qps_tol) * qps_base_sum):
+        violations.append(
+            f"{name}: aggregate qps over {qps_count} leaves "
+            f"{qps_fresh_sum:.1f} < {1.0 - qps_tol:.2f} x baseline "
+            f"{qps_base_sum:.1f} "
+            f"(-{100 * (1 - qps_fresh_sum / qps_base_sum):.0f}%)")
+    return violations, notes
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fresh", required=True,
+                    help="directory with freshly generated BENCH_*.json")
+    ap.add_argument("--baseline", default="benchmarks/baselines",
+                    help="directory with the committed baselines")
+    ap.add_argument("--recall-tol", type=float, default=RECALL_TOL)
+    ap.add_argument("--qps-tol", type=float, default=QPS_TOL)
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="copy the fresh artifacts over the baselines "
+                         "(then commit them) instead of gating")
+    args = ap.parse_args()
+
+    names = sorted(f for f in os.listdir(args.baseline)
+                   if f.startswith("BENCH_") and f.endswith(".json")) \
+        if os.path.isdir(args.baseline) else []
+    if args.update_baselines:
+        os.makedirs(args.baseline, exist_ok=True)
+        fresh_names = sorted(
+            f for f in os.listdir(args.fresh)
+            if f.startswith("BENCH_") and f.endswith(".json"))
+        for f in fresh_names:
+            shutil.copyfile(os.path.join(args.fresh, f),
+                            os.path.join(args.baseline, f))
+            print(f"bench-gate: baseline refreshed: {f}")
+        if not fresh_names:
+            print("bench-gate: no fresh BENCH_*.json to adopt",
+                  file=sys.stderr)
+            sys.exit(1)
+        return
+    if not names:
+        print(f"bench-gate: no baselines under {args.baseline}; "
+              "run with --update-baselines to create them",
+              file=sys.stderr)
+        sys.exit(1)
+
+    all_violations, checked = [], 0
+    for name in names:
+        fresh_path = os.path.join(args.fresh, name)
+        if not os.path.exists(fresh_path):
+            all_violations.append(
+                f"{name}: baseline exists but no fresh artifact was "
+                "generated")
+            continue
+        with open(os.path.join(args.baseline, name)) as f:
+            baseline = json.load(f)
+        with open(fresh_path) as f:
+            fresh = json.load(f)
+        violations, notes = gate_file(
+            name, baseline, fresh, recall_tol=args.recall_tol,
+            qps_tol=args.qps_tol)
+        checked += 1
+        for n in notes:
+            print(f"bench-gate: note: {n}")
+        all_violations.extend(violations)
+
+    if all_violations:
+        print(f"bench-gate: FAILED ({len(all_violations)} violations "
+              f"over {checked} artifacts):", file=sys.stderr)
+        for v in all_violations:
+            print(f"  {v}", file=sys.stderr)
+        print("bench-gate: if the change is intentional, refresh with "
+              "--update-baselines and commit", file=sys.stderr)
+        sys.exit(1)
+    print(f"bench-gate: OK ({checked} artifacts within tolerance: "
+          f"recall -{args.recall_tol}, quick qps -{args.qps_tol:.0%})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Quantized-arena benchmark: float32 vs int8 recall / QPS / bytes.
+
+For each metric (l2, angular, ip) builds one index and measures, on the
+fused single-host pipeline (``search_single_host``):
+
+  * recall@10 of the float32 path and of the int8 path (asymmetric
+    quantized beam search + exact float32 rerank of the top
+    ``rerank_factor * k`` candidates);
+  * steady-state QPS of both paths (best of ``repeats`` timed passes
+    over the query batch, jit-warm);
+  * arena bytes: the vector payload (what quantization compresses —
+    float32 data vs int8 codes + the [w, d] scale/zero grid) and the
+    total arena including the shared adjacency/ids arrays.
+
+Writes one JSON row per metric to ``BENCH_quant.json``; CI's bench-gate
+diffs the recall/QPS numbers of a fresh ``--quick`` run against the
+committed ``benchmarks/baselines/`` copies.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import (clustered_vectors, norm_spread_vectors,
+                                  query_set)
+from repro.kernels.quant_distance import quant_impl
+
+RERANK_FACTOR = 4
+
+
+def _workload(metric: str, n: int, d: int, q: int) -> C.Workload:
+    if metric == "ip":
+        x = norm_spread_vectors(n, d, C.N_CLUSTERS, seed=2)
+        queries = np.random.default_rng(3).normal(
+            size=(q, d)).astype(np.float32)
+    else:
+        x = clustered_vectors(n, d, C.N_CLUSTERS, seed=0)
+        queries = query_set(x, q, seed=1)
+    xn = M.preprocess_dataset(x, metric)
+    qn = M.preprocess_queries(queries, metric)
+    true_ids, _ = M.brute_force_topk(qn, xn, C.TOPK, metric)
+    return C.Workload(x, queries, true_ids, metric)
+
+
+def _recall(ids, true_ids) -> float:
+    return sum(
+        len(set(np.asarray(a).tolist()) & set(b.tolist()))
+        for a, b in zip(ids, true_ids)) / true_ids.size
+
+
+def _timed_qps(index, queries, *, quantize: bool, repeats: int) -> float:
+    search_single_host(index, queries, k=C.TOPK, quantize=quantize,
+                       rerank_factor=RERANK_FACTOR)   # warm the jit cache
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        search_single_host(index, queries, k=C.TOPK, quantize=quantize,
+                           rerank_factor=RERANK_FACTOR)
+        best = min(best, time.perf_counter() - t0)
+    return len(queries) / best
+
+
+def run(quick: bool = False, n: int | None = None,
+        d: int | None = None) -> list:
+    n = n or (3_000 if quick else C.N_ITEMS)
+    d = d or C.N_DIM
+    q = 64 if quick else C.N_QUERIES
+    shards = 4 if quick else C.NUM_SHARDS
+    repeats = 3
+    rows = []
+    for metric in ("l2", "angular", "ip"):
+        w = _workload(metric, n, d, q)
+        cfg = PyramidConfig(
+            metric=metric, num_shards=shards,
+            meta_size=min(C.META_SIZE, max(shards, n // 16)),
+            sample_size=min(n, 8_000), branching_factor=2,
+            max_degree=16, max_degree_upper=8, ef_construction=60,
+            ef_search=80, kmeans_iters=8,
+            replication_r=40 if metric == "ip" else 0, seed=0)
+        index = build_pyramid_index(w.x, cfg)
+
+        ids_f, _, _ = search_single_host(index, w.queries, k=C.TOPK)
+        recall_f = _recall(ids_f, w.true_ids)
+        qps_f = _timed_qps(index, w.queries, quantize=False,
+                           repeats=repeats)
+
+        ids_q, _, _ = search_single_host(
+            index, w.queries, k=C.TOPK, quantize=True,
+            rerank_factor=RERANK_FACTOR)
+        recall_q = _recall(ids_q, w.true_ids)
+        qps_q = _timed_qps(index, w.queries, quantize=True,
+                           repeats=repeats)
+
+        af = index.arena("float32")
+        aq = index.arena("int8")
+        row = {
+            "metric": metric, "n": n, "d": d, "shards": shards,
+            "k": C.TOPK, "rerank_factor": RERANK_FACTOR,
+            "recall_at_10_float32": round(recall_f, 4),
+            "recall_at_10_int8": round(recall_q, 4),
+            "recall_drop": round(recall_f - recall_q, 4),
+            "qps_float32": round(qps_f, 1),
+            "qps_int8": round(qps_q, 1),
+            "vector_bytes_float32": af.vector_nbytes,
+            "vector_bytes_int8": aq.vector_nbytes,
+            "vector_reduction": round(
+                af.vector_nbytes / aq.vector_nbytes, 2),
+            "arena_total_bytes_float32": af.total_nbytes,
+            "arena_total_bytes_int8": aq.total_nbytes,
+        }
+        rows.append(row)
+        C.emit(f"quant_{metric}_int8", 1e6 * q / row["qps_int8"],
+               f"recall={row['recall_at_10_int8']} "
+               f"(float {row['recall_at_10_float32']}), "
+               f"{row['vector_reduction']}x smaller vectors")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--d", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = run(quick=args.quick, n=args.n, d=args.d)
+    payload = {"quick": args.quick, "impl": quant_impl(), "rows": rows}
+    C.write_bench(args.out, "quant", payload)
+    payload = {"figure": "quant", **payload}
+    json.dump(payload, sys.stdout, indent=2)
+    print()
+    worst_drop = max(r["recall_drop"] for r in rows)
+    worst_red = min(r["vector_reduction"] for r in rows)
+    if worst_drop > 0.01 or worst_red < 3.0:
+        print(f"QUANT GATE FAILED: recall drop {worst_drop} (max 0.01) "
+              f"/ vector reduction {worst_red}x (min 3x)",
+              file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -140,13 +140,24 @@ def latency_summary(results) -> Dict[str, float]:
             "mean_s": float(np.mean(lats)) if lats else float("nan")}
 
 
+def ensure_parent(path: str) -> str:
+    """Create ``path``'s parent directory (CI writes artifacts into a
+    fresh-bench/ dir the bench-gate then diffs against the committed
+    baselines). Returns ``path`` so writers can inline it."""
+    import os
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    return path
+
+
 def write_bench(path: Optional[str], figure: str, payload: dict) -> None:
     """Write a ``BENCH_*.json`` artifact (CI uploads these to track the
     robustness/perf trajectory); no-op when ``path`` is falsy."""
     if not path:
         return
     import json
-    with open(path, "w") as f:
+    with open(ensure_parent(path), "w") as f:
         json.dump({"figure": figure, **payload}, f, indent=2)
 
 

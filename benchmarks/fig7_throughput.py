@@ -114,7 +114,7 @@ def run(quick: bool = False, out: str | None = None):
         assert rows[0]["fused"]["qps"] > rows[-1]["fused"]["qps"], \
             f"throughput should drop with K: {rows}"
     if out:
-        with open(out, "w") as f:
+        with open(C.ensure_parent(out), "w") as f:
             json.dump({"figure": "fig7_throughput",
                        "quick": quick,
                        "n_items": 4_000 if quick else C.N_ITEMS,

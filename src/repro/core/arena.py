@@ -19,6 +19,14 @@ jit compiles here, a stacked array pytree there. The arena unifies them:
 The per-stage helpers (``shard_search``, ``scatter_partials``) are the
 building blocks the SPMD path wraps in ``shard_map`` — the three search
 paths differ only in *where* the stages run, never in what they compute.
+
+A :class:`QuantizedShardArena` is the int8-compressed twin
+(``index.arena(dtype="int8")``): same stacked layout, ~4x smaller HBM
+vector payload, asymmetric float32-query x int8-database distances
+(``repro.kernels.quant_distance``) inside the identical pipeline.
+Callers that want float-path recall rerank the top ``rerank_factor * k``
+candidates exactly (``repro.core.quant.exact_rerank_np``) — see
+``search_single_host(quantize=True)``.
 """
 from __future__ import annotations
 
@@ -67,6 +75,16 @@ class ShardArena:
     def num_shards(self) -> int:
         return self.data.shape[0]
 
+    @property
+    def vector_nbytes(self) -> int:
+        """Bytes of the vector payload (what quantization compresses;
+        adjacency/ids are common to both arena forms)."""
+        return int(self.data.nbytes)
+
+    @property
+    def total_nbytes(self) -> int:
+        return int(sum(leaf.nbytes for leaf in self.tree_flatten()[0]))
+
     def shard(self, i) -> H.HNSWArrays:
         """Uncached view of shard ``i`` (safe on traced values, e.g.
         inside ``shard_map``/``vmap`` where ``i`` indexes local slots)."""
@@ -74,6 +92,15 @@ class ShardArena:
             data=self.data[i], ids=self.ids[i], bottom=self.bottom[i],
             upper=self.upper[i], entry=self.entry[i],
             num_upper_levels=self.num_upper_levels[i])
+
+    def as_graph(self) -> H.HNSWArrays:
+        """Reinterpret already-sliced leaves as one graph — for use
+        inside ``vmap``/``lax.map`` over the shard axis, where every
+        leaf has lost its leading ``w`` dimension."""
+        return H.HNSWArrays(
+            data=self.data, ids=self.ids, bottom=self.bottom,
+            upper=self.upper, entry=self.entry,
+            num_upper_levels=self.num_upper_levels)
 
     def shard_view(self, i: int) -> H.HNSWArrays:
         """Memoised concrete view of shard ``i``: every executor replica
@@ -93,35 +120,142 @@ class ShardArena:
         round trip. Prefer ``index.arena()`` (memoised) over calling
         this directly.
         """
-        subs = index.subs
-        n_pad = max(g.n for g in subs)
-        l_pad = max(1, max(g.max_level for g in subs))
-        mu = max([lv.shape[1] for g in subs for lv in g.neighbors[1:]],
-                 default=1)
-        m0 = max(g.neighbors[0].shape[1] for g in subs)
-        d = subs[0].d
-        w = len(subs)
-
-        data = np.zeros((w, n_pad, d), np.float32)
-        ids = np.full((w, n_pad), -1, np.int32)
-        bottom = np.full((w, n_pad, m0), -1, np.int32)
-        upper = np.full((w, l_pad, n_pad, mu), -1, np.int32)
-        entry = np.zeros((w,), np.int32)
-        nul = np.zeros((w,), np.int32)
-        for i, g in enumerate(subs):
-            n = g.n
-            data[i, :n] = g.data
-            ids[i, :n] = g.ids
-            bottom[i, :n, : g.neighbors[0].shape[1]] = g.neighbors[0]
-            for lvl in range(1, g.max_level + 1):
-                lv = g.neighbors[lvl]
-                upper[i, lvl - 1, :n, : lv.shape[1]] = lv
-            entry[i] = int(g.entry)
-            nul[i] = int(g.max_level)
+        st = _stack_host(index)
         return cls(
-            data=jnp.asarray(data), ids=jnp.asarray(ids),
-            bottom=jnp.asarray(bottom), upper=jnp.asarray(upper),
-            entry=jnp.asarray(entry), num_upper_levels=jnp.asarray(nul))
+            data=jnp.asarray(st["data"]), ids=jnp.asarray(st["ids"]),
+            bottom=jnp.asarray(st["bottom"]),
+            upper=jnp.asarray(st["upper"]),
+            entry=jnp.asarray(st["entry"]),
+            num_upper_levels=jnp.asarray(st["num_upper_levels"]))
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantizedShardArena:
+    """Int8-compressed arena: same stacked layout as :class:`ShardArena`
+    but ``data`` holds codes on a per-dimension affine grid
+    (``repro.core.quant.QuantParams``) — the HBM vector payload shrinks
+    ~4x, which is what lets a device serve a dataset its HBM could not
+    hold in float32.
+
+    ``scale``/``zero`` are the GLOBAL grid tiled per shard ([w, d]), so
+    every leaf is shard-leading — the SPMD program shards all leaves
+    over the ``model`` axis with one spec, and ``vmap``/``lax.map`` over
+    the shard axis map the whole pytree uniformly. Quantization happens
+    host-side at build, so no float32 copy of the vectors ever reaches
+    the device.
+    """
+
+    data: jnp.ndarray     # [w, n_pad, d] int8 codes
+    ids: jnp.ndarray      # [w, n_pad] (-1 pad)
+    bottom: jnp.ndarray   # [w, n_pad, M0]
+    upper: jnp.ndarray    # [w, L, n_pad, Mu]
+    entry: jnp.ndarray    # [w]
+    num_upper_levels: jnp.ndarray  # [w]
+    scale: jnp.ndarray    # [w, d] f32 (global grid, tiled per shard)
+    zero: jnp.ndarray     # [w, d] f32
+
+    def __post_init__(self):
+        self._views: Dict[int, H.QuantHNSWArrays] = {}
+
+    def tree_flatten(self):
+        return (self.data, self.ids, self.bottom, self.upper, self.entry,
+                self.num_upper_levels, self.scale, self.zero), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def num_shards(self) -> int:
+        return self.data.shape[0]
+
+    @property
+    def vector_nbytes(self) -> int:
+        return int(self.data.nbytes + self.scale.nbytes
+                   + self.zero.nbytes)
+
+    @property
+    def total_nbytes(self) -> int:
+        return int(sum(leaf.nbytes for leaf in self.tree_flatten()[0]))
+
+    def shard(self, i) -> H.QuantHNSWArrays:
+        return H.QuantHNSWArrays(
+            data=self.data[i], ids=self.ids[i], bottom=self.bottom[i],
+            upper=self.upper[i], entry=self.entry[i],
+            num_upper_levels=self.num_upper_levels[i],
+            scale=self.scale[i], zero=self.zero[i])
+
+    def as_graph(self) -> H.QuantHNSWArrays:
+        return H.QuantHNSWArrays(
+            data=self.data, ids=self.ids, bottom=self.bottom,
+            upper=self.upper, entry=self.entry,
+            num_upper_levels=self.num_upper_levels, scale=self.scale,
+            zero=self.zero)
+
+    def shard_view(self, i: int) -> H.QuantHNSWArrays:
+        if i not in self._views:
+            self._views[i] = self.shard(i)
+        return self._views[i]
+
+    @classmethod
+    def from_index(cls, index, params) -> "QuantizedShardArena":
+        """Quantize ``index.subs`` onto ``params``' grid and stack.
+
+        The codes are produced host-side from the float graph data
+        (``QuantParams.quantize`` row by shard), so building a quantized
+        arena never uploads a float32 copy of the vectors — the device
+        only ever sees int8. Prefer ``index.arena(dtype="int8")``
+        (memoised) over calling this directly.
+        """
+        st = _stack_host(index, quantize=params.quantize)
+        w = st["data"].shape[0]
+        scale = np.tile(params.scale[None, :], (w, 1))
+        zero = np.tile(params.zero[None, :], (w, 1))
+        return cls(
+            data=jnp.asarray(st["data"]), ids=jnp.asarray(st["ids"]),
+            bottom=jnp.asarray(st["bottom"]),
+            upper=jnp.asarray(st["upper"]),
+            entry=jnp.asarray(st["entry"]),
+            num_upper_levels=jnp.asarray(st["num_upper_levels"]),
+            scale=jnp.asarray(scale), zero=jnp.asarray(zero))
+
+
+def _stack_host(index, quantize=None) -> Dict[str, np.ndarray]:
+    """Stack ``index.subs`` into equal-padded host arrays (the shared
+    body of both ``from_index`` builders). ``quantize`` maps each
+    shard's [n, d] float rows to its stored dtype (int8 codes for the
+    quantized arena); pad rows stay zero in either dtype — they are
+    unreachable (no neighbours, id -1), so their code values are inert.
+    """
+    subs = index.subs
+    n_pad = max(g.n for g in subs)
+    l_pad = max(1, max(g.max_level for g in subs))
+    mu = max([lv.shape[1] for g in subs for lv in g.neighbors[1:]],
+             default=1)
+    m0 = max(g.neighbors[0].shape[1] for g in subs)
+    d = subs[0].d
+    w = len(subs)
+
+    data = np.zeros((w, n_pad, d),
+                    np.int8 if quantize is not None else np.float32)
+    ids = np.full((w, n_pad), -1, np.int32)
+    bottom = np.full((w, n_pad, m0), -1, np.int32)
+    upper = np.full((w, l_pad, n_pad, mu), -1, np.int32)
+    entry = np.zeros((w,), np.int32)
+    nul = np.zeros((w,), np.int32)
+    for i, g in enumerate(subs):
+        n = g.n
+        data[i, :n] = quantize(g.data) if quantize is not None else g.data
+        ids[i, :n] = g.ids
+        bottom[i, :n, : g.neighbors[0].shape[1]] = g.neighbors[0]
+        for lvl in range(1, g.max_level + 1):
+            lv = g.neighbors[lvl]
+            upper[i, lvl - 1, :n, : lv.shape[1]] = lv
+        entry[i] = int(g.entry)
+        nul[i] = int(g.max_level)
+    return {"data": data, "ids": ids, "bottom": bottom, "upper": upper,
+            "entry": entry, "num_upper_levels": nul}
 
 
 # ---------------------------------------------------------------------------
@@ -150,12 +284,17 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
         sequential on one core anyway.
 
     Returns (qidx [w, C] i32, ids [w, C, k] i32, scores [w, C, k] f32).
+
+    Works identically over a float :class:`ShardArena` and a
+    :class:`QuantizedShardArena` — the map runs over the arena *pytree*
+    (every leaf is shard-leading), and ``as_graph()`` rebuilds the
+    matching per-shard graph type, whose ``score_nodes`` carries the
+    representation-specific distance.
     """
     b = queries.shape[0]
 
-    def one_shard(data, ids_, bottom, upper, entry, nul, shard_mask):
-        g = H.HNSWArrays(data=data, ids=ids_, bottom=bottom, upper=upper,
-                         entry=entry, num_upper_levels=nul)
+    def one_shard(arena_slice, shard_mask):
+        g = arena_slice.as_graph()
         qidx = jnp.nonzero(shard_mask, size=capacity, fill_value=b)[0]
         slot_valid = qidx < b
         qs = queries[jnp.clip(qidx, 0, b - 1)]               # [C, d]
@@ -165,11 +304,9 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
         scores_out = jnp.where(slot_valid[:, None], scores_out, -jnp.inf)
         return qidx.astype(jnp.int32), ids_out, scores_out
 
-    leaves = (arena.data, arena.ids, arena.bottom, arena.upper,
-              arena.entry, arena.num_upper_levels, mask.T)
     if shard_axis == "map":
-        return jax.lax.map(lambda t: one_shard(*t), leaves)
-    return jax.vmap(one_shard)(*leaves)
+        return jax.lax.map(lambda t: one_shard(*t), (arena, mask.T))
+    return jax.vmap(one_shard)(arena, mask.T)
 
 
 def scatter_partials(qidx: jnp.ndarray, ids: jnp.ndarray,

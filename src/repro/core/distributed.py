@@ -39,7 +39,9 @@ from repro.common.jax_compat import shard_map
 from repro.common.config import PyramidConfig
 from repro.core import hnsw as H
 from repro.core import metrics as M
-from repro.core.arena import (ShardArena, arena_search, scatter_partials,
+from repro.core import quant as Q
+from repro.core.arena import (QuantizedShardArena, ShardArena,
+                              arena_search, scatter_partials,
                               shard_search)
 from repro.core.meta_index import PyramidIndex
 from repro.core.router import route_queries
@@ -67,7 +69,8 @@ def _pow2(n: int) -> int:
 def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
                        ef: Optional[int] = None,
                        branching_factor: Optional[int] = None,
-                       naive: bool = False):
+                       naive: bool = False, quantize: bool = False,
+                       rerank_factor: int = 4):
     """Alg. 4 single-host entry point, on the fused arena pipeline.
 
     Routes on device, then runs ``arena_search`` with a precomputed mask
@@ -78,7 +81,15 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
     repeated calls with varying routing fan-out reuse the jit cache.
 
     naive=True searches every shard (the HNSW-naive baseline of Sec. III).
-    Returns (ids [B, k], scores [B, k], mask [B, w]).
+    quantize=True runs the pipeline over the int8 arena
+    (``index.arena(dtype="int8")``): the beam search scores asymmetric
+    float32-query x int8-database distances, returns the top
+    ``rerank_factor * k`` candidates, and an exact float32 rerank
+    against ``index.rerank_table()`` keeps the k best — recall@10 stays
+    within 1% of the float path (see ``tests/test_quant.py``) while the
+    device vector payload shrinks ~4x.
+    Returns (ids [B, k], scores [B, k], mask [B, w]); with
+    ``quantize=True`` the scores are exact float32 similarities.
     """
     cfg = index.config
     ef = ef or cfg.ef_search
@@ -87,7 +98,9 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
     q = M.preprocess_queries(queries, cfg.metric)
     b = q.shape[0]
     w = index.num_shards
-    arena = index.arena()
+    arena = index.arena("int8" if quantize else "float32")
+    k_search = k * rerank_factor if quantize else k
+    ef = max(ef, k_search)
 
     if naive:
         mask = np.ones((b, w), dtype=bool)
@@ -109,8 +122,14 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
     capacity = min(bp, max(32, -(-max_load // 32) * 32))
 
     ids, scores, _ = arena_search(
-        arena, None, None, jnp.asarray(qp), metric=metric, k=k, ef=ef,
-        capacity=capacity, mask=jnp.asarray(mp))
+        arena, None, None, jnp.asarray(qp), metric=metric, k=k_search,
+        ef=ef, capacity=capacity, mask=jnp.asarray(mp))
+    if quantize:
+        table_ids, table_vecs = index.rerank_table()
+        out_ids, out_scores = Q.exact_rerank_np(
+            q, np.asarray(ids)[:b], k, table_ids=table_ids,
+            table_vecs=table_vecs, metric=metric)
+        return out_ids, out_scores, mask
     return (np.asarray(ids)[:b].astype(np.int64),
             np.asarray(scores)[:b], mask)
 
@@ -205,7 +224,10 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
                            batch: int, ef: Optional[int] = None,
                            max_iters: int = 400, naive: bool = False,
                            model_axis: str = "model",
-                           data_axis: Optional[str] = None):
+                           data_axis: Optional[str] = None,
+                           quantize: bool = False,
+                           rerank_factor: int = 4,
+                           index: Optional[PyramidIndex] = None):
     """Builds the jitted SPMD search step for a given mesh.
 
     The returned fn has signature
@@ -218,9 +240,24 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
     When ``data_axis`` is given, the query batch is sharded over it (each
     data slice is an independent replica group serving its slice — the
     paper's replication axis) and ``batch`` must be the PER-REPLICA batch.
+
+    With ``quantize=True`` the fn expects a ``QuantizedShardArena``
+    (every leaf is shard-leading, so the same ``P(model_axis)`` sharding
+    applies) and the on-device program searches/merges the top
+    ``rerank_factor * k`` quantized candidates; the exact float32 rerank
+    then runs host-side against ``index.rerank_table()`` — the
+    full-precision copy lives with the coordinator (the paper's shared
+    storage), never in device HBM — so ``index`` is required and the
+    wrapper returns numpy ``(ids [B, k] int64, scores [B, k] f32)``.
     """
     metric = "ip" if cfg.is_mips else cfg.metric
     ef = ef or cfg.ef_search
+    k_inner = k * rerank_factor if quantize else k
+    ef = max(ef, k_inner)
+    if quantize and index is None:
+        raise ValueError(
+            "make_pyramid_search_fn(quantize=True) needs index= for the "
+            "exact float32 rerank table")
     w = cfg.num_shards
     n_model = mesh.shape[model_axis]
     assert w % n_model == 0, (w, n_model)
@@ -249,8 +286,8 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
         local_mask = jax.lax.dynamic_slice_in_dim(
             mask, my * w_local, w_local, axis=1)
         qidx, ids, scores = shard_search(
-            arena, local_mask, queries, metric=metric, k=k,
-            ef=max(ef, k), capacity=capacity, max_iters=max_iters)
+            arena, local_mask, queries, metric=metric, k=k_inner,
+            ef=max(ef, k_inner), capacity=capacity, max_iters=max_iters)
 
         # coordinator merge: gather partials from all shards, then the
         # same scatter + dedup merge as the fused single-host pipeline
@@ -259,22 +296,46 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
         ids = jax.lax.all_gather(ids, model_axis, tiled=True)  # [w, C, k]
         scores = jax.lax.all_gather(scores, model_axis, tiled=True)
         flat_s, flat_i = scatter_partials(qidx, ids, scores, b)
-        top_scores, top_ids = merge_topk(flat_s, flat_i, k=k,
+        top_scores, top_ids = merge_topk(flat_s, flat_i, k=k_inner,
                                          use_kernel=False)
         return top_ids, top_scores
 
     qspec = P(data_axis) if data_axis else P()
+    if quantize:
+        arena_spec = QuantizedShardArena(
+            data=P(model_axis), ids=P(model_axis), bottom=P(model_axis),
+            upper=P(model_axis), entry=P(model_axis),
+            num_upper_levels=P(model_axis), scale=P(model_axis),
+            zero=P(model_axis))
+    else:
+        arena_spec = ShardArena(
+            data=P(model_axis), ids=P(model_axis), bottom=P(model_axis),
+            upper=P(model_axis), entry=P(model_axis),
+            num_upper_levels=P(model_axis))
     fn = shard_map(
         spmd, mesh=mesh,
         in_specs=(
-            ShardArena(
-                data=P(model_axis), ids=P(model_axis),
-                bottom=P(model_axis), upper=P(model_axis),
-                entry=P(model_axis), num_upper_levels=P(model_axis)),
+            arena_spec,
             H.HNSWArrays(P(), P(), P(), P(), P(), P()),  # replicated meta
             P(),
             qspec,
         ),
         out_specs=(qspec, qspec),
         check_vma=False)
-    return jax.jit(fn)
+    jfn = jax.jit(fn)
+    if not quantize:
+        return jfn
+
+    def reranked(arena, meta, part_of_center, queries):
+        cand_ids, _ = jfn(arena, meta, part_of_center, queries)
+        # resolve the table at CALL time (it is memoised on the index
+        # and dropped by invalidate_device_cache): a caller that
+        # add_items-ed and rebuilt the arena between calls must not
+        # rerank new ids against a stale snapshot — they would silently
+        # drop to (-1, -inf)
+        table_ids, table_vecs = index.rerank_table()
+        return Q.exact_rerank_np(
+            np.asarray(queries), np.asarray(cand_ids), k,
+            table_ids=table_ids, table_vecs=table_vecs, metric=metric)
+
+    return reranked

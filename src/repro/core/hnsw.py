@@ -104,7 +104,14 @@ class HNSWGraph:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class HNSWArrays:
-    """Device-resident arrays consumed by the jitted search."""
+    """Device-resident arrays consumed by the jitted search.
+
+    The graph container owns the *scoring* of its own rows
+    (:meth:`score_nodes`): the beam search gathers node indices and asks
+    the graph for similarities, so a compressed graph representation
+    (:class:`QuantHNSWArrays`) plugs into the identical walk by
+    overriding one method instead of forking the search.
+    """
 
     data: jnp.ndarray        # [n, d] f32
     ids: jnp.ndarray         # [n] i32 external ids
@@ -121,6 +128,58 @@ class HNSWArrays:
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+    def score_nodes(self, q: jnp.ndarray, nodes: jnp.ndarray,
+                    metric: str) -> jnp.ndarray:
+        """Similarity of one query against graph rows.
+
+        Args: q [d] f32; nodes [m] i32 row indices (pre-clipped to
+        valid range — callers mask invalid slots on the result).
+        Returns [m] f32 similarities (larger = more similar).
+        """
+        return M.similarity_matrix(q[None, :], self.data[nodes], metric)[0]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class QuantHNSWArrays:
+    """Int8-compressed twin of :class:`HNSWArrays`.
+
+    ``data`` holds int8 codes on a per-dimension affine grid
+    (``repro.core.quant.QuantParams``); scoring is asymmetric — the
+    float32 query against dequantized rows, via the
+    ``repro.kernels.quant_distance`` oracle semantics — so the identical
+    beam-search walk runs over a ~4x smaller HBM vector payload. The
+    adjacency/ids fields are bit-identical to the float graph's.
+    """
+
+    data: jnp.ndarray        # [n, d] int8 codes
+    ids: jnp.ndarray         # [n] i32 external ids
+    bottom: jnp.ndarray      # [n, M0] i32
+    upper: jnp.ndarray       # [L, n, Mu] i32
+    entry: jnp.ndarray       # scalar i32
+    num_upper_levels: jnp.ndarray  # scalar i32
+    scale: jnp.ndarray       # [d] f32 per-dimension step
+    zero: jnp.ndarray        # [d] f32 per-dimension zero-point
+
+    def tree_flatten(self):
+        children = (self.data, self.ids, self.bottom, self.upper,
+                    self.entry, self.num_upper_levels, self.scale,
+                    self.zero)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def score_nodes(self, q: jnp.ndarray, nodes: jnp.ndarray,
+                    metric: str) -> jnp.ndarray:
+        """Asymmetric quantized scoring: float32 ``q`` against the
+        dequantized code rows (same signature/contract as
+        ``HNSWArrays.score_nodes``)."""
+        from repro.kernels.quant_distance import quant_scores_ref
+        return quant_scores_ref(q[None, :], self.data[nodes], self.scale,
+                                self.zero, metric=metric)[0]
 
 
 # ---------------------------------------------------------------------------
@@ -299,7 +358,10 @@ def build_hnsw(data: np.ndarray,
 
 
 def _score_one(q: jnp.ndarray, x: jnp.ndarray, metric: str) -> jnp.ndarray:
-    """Similarity of one query against [m, d] candidates -> [m]."""
+    """Similarity of one query against [m, d] candidates -> [m].
+
+    Float-only helper; the walk itself scores through
+    ``g.score_nodes`` so quantized graphs plug in transparently."""
     return M.similarity_matrix(q[None, :], x, metric)[0]
 
 
@@ -323,15 +385,16 @@ def _greedy_descend(g: HNSWArrays, q: jnp.ndarray, metric: str,
             cur, cur_sim, _, steps = state
             nbrs = adj_l[cur]                                   # [Mu]
             valid = nbrs >= 0
-            vecs = g.data[jnp.clip(nbrs, 0)]                     # [Mu, d]
-            sims = jnp.where(valid, _score_one(q, vecs, metric), -jnp.inf)
+            sims = jnp.where(
+                valid, g.score_nodes(q, jnp.clip(nbrs, 0), metric),
+                -jnp.inf)
             j = jnp.argmax(sims)
             better = sims[j] > cur_sim
             new_cur = jnp.where(better, nbrs[j], cur)
             new_sim = jnp.where(better, sims[j], cur_sim)
             return new_cur, new_sim, better, steps + 1
 
-        sim0 = _score_one(q, g.data[node][None, :], metric)[0]
+        sim0 = g.score_nodes(q, node[None], metric)[0]
         node, _, _, _ = jax.lax.while_loop(
             walk_cond, walk_body, (node, sim0, jnp.bool_(True), jnp.int32(0)))
         return node, ()
@@ -359,7 +422,7 @@ def _beam_search_bottom(g: HNSWArrays, q: jnp.ndarray, entry: jnp.ndarray,
     visited = jnp.zeros((n,), dtype=jnp.bool_).at[entry].set(True)
     beam_ids = jnp.full((ef,), -1, dtype=jnp.int32).at[0].set(entry)
     beam_scores = jnp.full((ef,), -jnp.inf, jnp.float32).at[0].set(
-        _score_one(q, g.data[entry][None, :], metric)[0])
+        g.score_nodes(q, entry[None], metric)[0])
     expanded = jnp.zeros((ef,), dtype=jnp.bool_)
 
     def cond(state):
@@ -378,8 +441,8 @@ def _beam_search_bottom(g: HNSWArrays, q: jnp.ndarray, entry: jnp.ndarray,
         # gather + score its neighbours
         nbrs = g.bottom[node]                              # [M0]
         valid = jnp.logical_and(nbrs >= 0, ~visited[jnp.clip(nbrs, 0)])
-        vecs = g.data[jnp.clip(nbrs, 0)]
-        sims = jnp.where(valid, _score_one(q, vecs, metric), -jnp.inf)
+        sims = jnp.where(
+            valid, g.score_nodes(q, jnp.clip(nbrs, 0), metric), -jnp.inf)
         visited = visited.at[jnp.clip(nbrs, 0)].set(
             jnp.logical_or(visited[jnp.clip(nbrs, 0)], nbrs >= 0))
         # merge into beam: top-ef of (beam ∪ neighbours)

@@ -32,14 +32,69 @@ class PyramidIndex:
     def num_shards(self) -> int:
         return len(self.subs)
 
-    def arena(self):
-        """The canonical device form (``repro.core.arena.ShardArena``),
-        built once and shared by every consumer — engines, the reference
-        search path and the SPMD program all read these same arrays."""
-        if getattr(self, "_arena", None) is None:
-            from repro.core.arena import ShardArena
-            self._arena = ShardArena.from_index(self)
-        return self._arena
+    def arena(self, dtype: str = "float32"):
+        """The canonical device form, built once per storage dtype and
+        shared by every consumer — engines, the reference search path
+        and the SPMD program all read these same arrays.
+
+        ``dtype="float32"`` (the default — unchanged from before) is a
+        ``repro.core.arena.ShardArena``; ``dtype="int8"`` is the
+        compressed ``QuantizedShardArena``, quantized host-side on this
+        index's frozen grid (:meth:`quant_params`) so the device never
+        holds a float32 copy of the vectors."""
+        cache = getattr(self, "_arena", None)
+        if not isinstance(cache, dict):   # None after invalidation
+            cache = {}
+            self._arena = cache
+        if dtype not in cache:
+            from repro.core.arena import QuantizedShardArena, ShardArena
+            if dtype == "float32":
+                cache[dtype] = ShardArena.from_index(self)
+            elif dtype == "int8":
+                cache[dtype] = QuantizedShardArena.from_index(
+                    self, self.quant_params())
+            else:
+                raise ValueError(
+                    f"arena dtype must be 'float32' or 'int8', "
+                    f"got {dtype!r}")
+        return cache[dtype]
+
+    def quant_params(self):
+        """This index's frozen int8 grid (``repro.core.quant.
+        QuantParams``): derived from per-dimension min/max over all
+        shards on first use, or attached from a store manifest
+        (:meth:`attach_quant_params`). Deliberately NOT dropped by
+        ``invalidate_device_cache`` — the grid stays frozen across
+        ``add_items`` so appended rows (and their delta-log replay)
+        quantize onto the identical grid, keeping rebuilt codes
+        bit-identical to the live index's."""
+        if getattr(self, "_quant_params", None) is None:
+            from repro.core.quant import QuantParams
+            self._quant_params = QuantParams.from_data(
+                [g.data for g in self.subs if g.n])
+        return self._quant_params
+
+    def attach_quant_params(self, params) -> None:
+        """Install a persisted grid (store load path) — reopening a
+        quantized index must not re-derive params from post-replay data,
+        or its codes would drift from the pre-restart engine's."""
+        self._quant_params = params
+
+    def rerank_table(self):
+        """Host-side exact-rerank lookup: ``(sorted unique ids [N],
+        float32 vectors [N, d])`` over every item in the index (MIPS
+        replication deduped). This is the full-precision copy the
+        quantized search reranks against — it lives in host memory, not
+        HBM, which is the point of the compressed arena."""
+        if getattr(self, "_rerank_table", None) is None:
+            ids_all = np.concatenate(
+                [np.asarray(g.ids, np.int64) for g in self.subs])
+            vecs_all = np.concatenate(
+                [np.asarray(g.data, np.float32) for g in self.subs])
+            uniq, first = np.unique(ids_all, return_index=True)
+            self._rerank_table = (uniq, np.ascontiguousarray(
+                vecs_all[first]))
+        return self._rerank_table
 
     def meta_arrays(self) -> H.HNSWArrays:
         if getattr(self, "_meta_arrays", None) is None:
@@ -59,9 +114,13 @@ class PyramidIndex:
 
     def invalidate_device_cache(self) -> None:
         """Drop memoised device arrays after an in-place mutation of
-        ``subs``/``meta`` (see ``repro.core.updates``)."""
+        ``subs``/``meta`` (see ``repro.core.updates``). The quantization
+        grid is NOT dropped: it is frozen state (see
+        :meth:`quant_params`), so a rebuilt int8 arena requantizes the
+        mutated data onto the same grid."""
         self._arena = None
         self._meta_arrays = None
+        self._rerank_table = None
 
     def delta_log(self):
         """The append-only insert journal this index is attached to, or
@@ -75,10 +134,13 @@ class PyramidIndex:
 
     def __getstate__(self):
         # device caches and the store attachment are derived/runtime
-        # state: never pickled (legacy save_index) nor persisted
+        # state: never pickled (legacy save_index) nor persisted; the
+        # quantization grid DOES travel — it is frozen semantic state
+        # (dropping it would re-derive a different grid after reload)
         state = dict(self.__dict__)
         state.pop("_arena", None)
         state.pop("_meta_arrays", None)
+        state.pop("_rerank_table", None)
         state.pop("_delta_log", None)
         return state
 

@@ -1,0 +1,156 @@
+"""Symmetric-int8 vector quantization for the compressed ShardArena.
+
+The quantization grid is per-dimension affine: dimension ``j`` stores
+codes ``c = clip(rint((x - zero[j]) / scale[j]), -127, 127)`` with the
+zero-point at the dimension's value-range midpoint, so the int8 range is
+used symmetrically around it and ``dequantize`` is one fused
+multiply-add (``x_hat = c * scale + zero``).
+
+Distance computation is *asymmetric* (ADC): queries stay float32 and are
+scored against dequantized database rows — the
+``repro.kernels.quant_distance`` family implements exactly
+``similarity(q, dequantize(codes))`` for all three metrics, so the
+quantized search differs from the float path only by the (bounded)
+per-dimension rounding error, which the exact float32 rerank
+(:func:`exact_rerank_np`) then removes from the top of the result list.
+
+The grid is FROZEN once derived: ``repro.store`` persists it in the
+version manifest and delta-log replay requantizes appended rows through
+the same params, so a recovered engine's int8 codes are bit-identical to
+the pre-crash engine's (see ``tests/test_quant.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core import metrics as M
+
+# int8 code range: symmetric, 254 steps between the per-dim min and max
+# (-128 is never produced, so negation/round-trips cannot saturate)
+_LEVELS = 254.0
+_CODE_MIN, _CODE_MAX = -127, 127
+
+
+@dataclasses.dataclass
+class QuantParams:
+    """Frozen per-dimension int8 quantization grid.
+
+    Attributes:
+      scale: [d] float32, step size per dimension (always > 0).
+      zero:  [d] float32, zero-point (value-range midpoint) per dimension.
+    """
+
+    scale: np.ndarray
+    zero: np.ndarray
+
+    def __post_init__(self):
+        self.scale = np.ascontiguousarray(self.scale, np.float32)
+        self.zero = np.ascontiguousarray(self.zero, np.float32)
+
+    @property
+    def d(self) -> int:
+        return int(self.scale.shape[0])
+
+    @classmethod
+    def from_data(cls, data: Union[np.ndarray, Sequence[np.ndarray]]
+                  ) -> "QuantParams":
+        """Derive the grid from per-dimension min/max over ``data`` (one
+        [n, d] array or a sequence of them, e.g. one per shard —
+        accumulated without concatenating, so deriving params never
+        doubles the dataset's host memory). Deterministic: a pure
+        function of the data values."""
+        if isinstance(data, np.ndarray):
+            data = [data]
+        lo = hi = None
+        for block in data:
+            block = np.asarray(block, np.float32)
+            if block.size == 0:
+                continue
+            blo, bhi = block.min(axis=0), block.max(axis=0)
+            lo = blo if lo is None else np.minimum(lo, blo)
+            hi = bhi if hi is None else np.maximum(hi, bhi)
+        if lo is None:
+            raise ValueError("cannot derive QuantParams from empty data")
+        lo64, hi64 = lo.astype(np.float64), hi.astype(np.float64)
+        scale = np.maximum(hi64 - lo64, 1e-12) / _LEVELS
+        zero = (lo64 + hi64) / 2.0
+        return cls(scale=scale.astype(np.float32),
+                   zero=zero.astype(np.float32))
+
+    def quantize(self, x: np.ndarray) -> np.ndarray:
+        """[*, d] float32 -> [*, d] int8 codes (rint = round-half-even,
+        matching jnp semantics bit-for-bit)."""
+        x = np.asarray(x, np.float32)
+        codes = np.rint((x - self.zero) / self.scale)
+        return np.clip(codes, _CODE_MIN, _CODE_MAX).astype(np.int8)
+
+    def dequantize(self, codes: np.ndarray) -> np.ndarray:
+        """[*, d] int8 codes -> [*, d] float32 reconstruction."""
+        return (np.asarray(codes, np.float32) * self.scale
+                + self.zero).astype(np.float32)
+
+    # -- manifest (de)serialisation -----------------------------------------
+
+    def to_manifest(self) -> Dict:
+        """JSON-able form persisted in the store manifest. Python floats
+        round-trip float32 values exactly through JSON repr, so a
+        reopened index requantizes on the identical grid."""
+        return {
+            "dtype": "int8",
+            "bits": 8,
+            "scale": [float(v) for v in self.scale],
+            "zero": [float(v) for v in self.zero],
+        }
+
+    @classmethod
+    def from_manifest(cls, entry: Dict) -> "QuantParams":
+        if entry.get("dtype") != "int8":
+            raise ValueError(
+                f"unsupported quantization dtype {entry.get('dtype')!r}")
+        return cls(scale=np.asarray(entry["scale"], np.float32),
+                   zero=np.asarray(entry["zero"], np.float32))
+
+
+def exact_rerank_np(queries: np.ndarray, cand_ids: np.ndarray, k: int, *,
+                    table_ids: np.ndarray, table_vecs: np.ndarray,
+                    metric: str) -> Tuple[np.ndarray, np.ndarray]:
+    """Exact float32 rerank of quantized-search candidates.
+
+    Rescores each query's candidate list against the original
+    full-precision vectors (``PyramidIndex.rerank_table()``) with the
+    same similarity the float path uses, and keeps the k best. Stable on
+    exact-score ties: tied candidates keep their incoming (quantized
+    top-k) order, so the rerank is deterministic.
+
+    Args:
+      queries: [B, d] float32 *preprocessed* queries.
+      cand_ids: [B, m] int external ids, -1 padded, deduped (the output
+        of a ``merge_topk`` pass over quantized partials).
+      k: neighbours to keep (k <= m for a meaningful rerank).
+      table_ids: [N] int64 sorted unique external ids.
+      table_vecs: [N, d] float32 vectors aligned with ``table_ids``.
+
+    Returns (ids [B, k] int64, scores [B, k] float32) best-first,
+    (-1, -inf) padded; scores are exact float32 similarities.
+    """
+    queries = np.asarray(queries, np.float32)
+    cand_ids = np.asarray(cand_ids)
+    b, m = cand_ids.shape
+    out_ids = np.full((b, k), -1, np.int64)
+    out_scores = np.full((b, k), -np.inf, np.float32)
+    pos = np.searchsorted(table_ids, np.clip(cand_ids, 0, None))
+    pos = np.clip(pos, 0, max(len(table_ids) - 1, 0))
+    found = np.logical_and(cand_ids >= 0, table_ids[pos] == cand_ids)
+    for i in range(b):
+        vi = np.where(found[i])[0]
+        if vi.size == 0:
+            continue
+        vecs = table_vecs[pos[i, vi]]
+        s = M.similarity_matrix_np(queries[i][None, :], vecs, metric)[0]
+        order = np.argsort(-s, kind="stable")[:k]
+        out_ids[i, : order.size] = cand_ids[i, vi[order]]
+        out_scores[i, : order.size] = s[order]
+    return out_ids, out_scores

@@ -8,22 +8,32 @@ machinery as the MoE layers (DESIGN.md §3/§4).
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+import warnings
+from typing import Set, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import hnsw as H
 
+_EF_RAISED_WARNED: Set[Tuple[int, int]] = set()
+
+
+def effective_ef(ef: int, branching_factor: int) -> int:
+    """The beam width routing actually searches with: the meta search
+    cannot return K = ``branching_factor`` neighbours from a narrower
+    beam, so ``ef`` is raised to K when the caller's value is smaller.
+    Exposed so serving surfaces (``ServingEngine.stats()['routing']``)
+    can report the real value instead of the requested one."""
+    return max(ef, branching_factor)
+
 
 @functools.partial(jax.jit, static_argnames=("metric", "branching_factor",
                                              "num_shards", "ef"))
-def route_queries(meta: H.HNSWArrays, part_of_center: jnp.ndarray,
-                  queries: jnp.ndarray, *, metric: str,
-                  branching_factor: int, num_shards: int,
-                  ef: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Returns (mask [B, w] bool — shard s must serve query b,
-    meta_ids [B, K] — the routed meta vertices)."""
+def _route_queries(meta: H.HNSWArrays, part_of_center: jnp.ndarray,
+                   queries: jnp.ndarray, *, metric: str,
+                   branching_factor: int, num_shards: int,
+                   ef: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
     k = branching_factor
     meta_ids, _ = H.hnsw_search(meta, queries, metric=metric, k=k,
                                 ef=max(ef, k))
@@ -33,6 +43,36 @@ def route_queries(meta: H.HNSWArrays, part_of_center: jnp.ndarray,
         jnp.clip(parts, 0), num_shards, dtype=jnp.bool_)
     onehot = jnp.logical_and(onehot, (parts >= 0)[..., None])
     return jnp.any(onehot, axis=1), meta_ids
+
+
+def route_queries(meta: H.HNSWArrays, part_of_center: jnp.ndarray,
+                  queries: jnp.ndarray, *, metric: str,
+                  branching_factor: int, num_shards: int,
+                  ef: int = 64) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (mask [B, w] bool — shard s must serve query b,
+    meta_ids [B, K] — the routed meta vertices).
+
+    ``ef`` below ``branching_factor`` is raised to it (a K-wide result
+    needs a K-wide beam); that used to happen silently — now it warns
+    once per (ef, K) combination and the effective value is available
+    via :func:`effective_ef` / the engine's ``stats()['routing']``.
+    """
+    eff = effective_ef(ef, branching_factor)
+    if eff != ef and (ef, branching_factor) not in _EF_RAISED_WARNED:
+        _EF_RAISED_WARNED.add((ef, branching_factor))
+        warnings.warn(
+            f"route_queries: requested ef={ef} is narrower than "
+            f"branching_factor K={branching_factor}; searching the "
+            f"meta-HNSW with effective ef={eff}",
+            RuntimeWarning, stacklevel=2)
+    return _route_queries(meta, part_of_center, queries, metric=metric,
+                          branching_factor=branching_factor,
+                          num_shards=num_shards, ef=eff)
+
+
+# call sites already inside a jitted program (the fused arena pipeline,
+# the SPMD shard_map body) trace the un-jitted core directly
+route_queries.__wrapped__ = _route_queries.__wrapped__
 
 
 def access_rate(mask: jnp.ndarray) -> float:

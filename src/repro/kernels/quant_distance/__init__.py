@@ -1,0 +1,7 @@
+from repro.kernels.quant_distance.ops import quant_impl, quant_scores
+from repro.kernels.quant_distance.ref import (dequantize_jnp,
+                                              quant_scores_np,
+                                              quant_scores_ref)
+
+__all__ = ["dequantize_jnp", "quant_impl", "quant_scores",
+           "quant_scores_np", "quant_scores_ref"]

@@ -1,0 +1,57 @@
+"""Public op: asymmetric int8 distance scan (Pallas on TPU, jnp oracle
+elsewhere).
+
+``quant_scores`` is THE scoring primitive of the quantized arena: the
+quantized beam search (``repro.core.hnsw.QuantHNSWArrays.score_nodes``)
+inlines the oracle semantics on its gathered neighbour tiles (a kernel
+launch inside the vmapped while_loop walk would defeat fusion — the same
+reason the SPMD path calls ``merge_topk`` with ``use_kernel=False``),
+while standalone batched scans — rerank-candidate scoring, benchmarks,
+brute-force baselines over a quantized shard — dispatch to the compiled
+Pallas kernel on TPU and to the jnp oracle (compiled XLA) everywhere
+else. All implementations share one semantics:
+``similarity(q, dequantize(codes))`` with the exact metric formulas of
+``repro.core.metrics``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant_distance.kernel import quant_distance_pallas
+from repro.kernels.quant_distance.ref import (dequantize_jnp,  # noqa: F401
+                                              quant_scores_np,
+                                              quant_scores_ref)
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def quant_impl() -> str:
+    """Which implementation :func:`quant_scores` dispatches to on this
+    backend (benchmark artifacts record it so the perf trajectory names
+    what was actually measured)."""
+    return "pallas-kernel" if _on_tpu() else "xla-oracle"
+
+
+def quant_scores(q: jnp.ndarray, codes: jnp.ndarray, scale: jnp.ndarray,
+                 zero: jnp.ndarray, *, metric: str,
+                 use_kernel: bool = True, block_q: int = 128,
+                 block_n: int = 512) -> jnp.ndarray:
+    """Similarity of float32 queries against int8 database codes.
+
+    Args:
+      q: [B, d] f32 preprocessed queries.
+      codes: [n, d] int8 codes on the ``(scale, zero)`` grid.
+      scale: [d] f32 per-dimension step.
+      zero: [d] f32 per-dimension zero-point.
+      use_kernel: False forces the jnp oracle (required inside traced
+        walks and shard_map, where a kernel launch cannot run).
+
+    Returns [B, n] f32 similarities (larger = more similar).
+    """
+    if not use_kernel or not _on_tpu():
+        return quant_scores_ref(q, codes, scale, zero, metric=metric)
+    return quant_distance_pallas(q, codes, scale, zero, metric=metric,
+                                 block_q=block_q, block_n=block_n)

@@ -1,0 +1,57 @@
+"""References for the asymmetric int8 distance: jnp oracle + numpy twin.
+
+Asymmetric distance computation (ADC): the query stays float32, the
+database row is an int8 code vector on a per-dimension affine grid
+(``repro.core.quant.QuantParams``). Every implementation computes
+EXACTLY ``similarity(q, dequantize(codes))`` with the metric formulas of
+``repro.core.metrics`` — including the angular epsilon — so the
+quantized search differs from the float path only by the grid's rounding
+error, never by a drifted distance definition.
+
+Semantics shared by every implementation (kernel / jnp / numpy):
+  * dequantization is the fused multiply-add ``x_hat = c * scale + zero``;
+  * l2 similarity is ``2 q.x_hat - ||q||^2 - ||x_hat||^2`` (matmul
+    shaped), ip is ``q.x_hat``, angular normalises both sides with the
+    metrics module's ``+ 1e-12`` epsilon;
+  * no masking: callers (the beam search, the padded kernel launch)
+    mask invalid rows themselves, as they do on the float path.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import metrics as M
+
+
+def dequantize_jnp(codes: jnp.ndarray, scale: jnp.ndarray,
+                   zero: jnp.ndarray) -> jnp.ndarray:
+    """[*, d] int8 codes -> [*, d] float32 rows (trace-friendly twin of
+    ``QuantParams.dequantize``)."""
+    return codes.astype(jnp.float32) * scale + zero
+
+
+def quant_scores_ref(q: jnp.ndarray, codes: jnp.ndarray,
+                     scale: jnp.ndarray, zero: jnp.ndarray, *,
+                     metric: str) -> jnp.ndarray:
+    """Asymmetric similarity oracle.
+
+    Args:
+      q: [B, d] float32 (preprocessed) queries.
+      codes: [n, d] int8 database codes.
+      scale: [d] float32 per-dimension step.
+      zero: [d] float32 per-dimension zero-point.
+
+    Returns [B, n] float32 similarities (larger = more similar).
+    """
+    x_hat = dequantize_jnp(codes, scale, zero)
+    return M.similarity_matrix(q, x_hat, metric)
+
+
+def quant_scores_np(q: np.ndarray, codes: np.ndarray, scale: np.ndarray,
+                    zero: np.ndarray, *, metric: str) -> np.ndarray:
+    """Numpy twin of :func:`quant_scores_ref` (host-side validation and
+    the exact-rerank tests' independent oracle)."""
+    x_hat = (np.asarray(codes, np.float32) * np.asarray(scale, np.float32)
+             + np.asarray(zero, np.float32))
+    return M.similarity_matrix_np(np.asarray(q, np.float32), x_hat, metric)

@@ -90,6 +90,14 @@ def main() -> None:
     ap.add_argument("--gc-keep", type=int, default=None,
                     help="after publishing, GC superseded versions "
                          "keeping this many")
+    ap.add_argument("--quantize", action="store_true",
+                    help="print the frozen int8 quantization grid. "
+                         "(Every publish persists the grid in the "
+                         "manifest, so ServingEngine.from_store(path, "
+                         "quantize=True) always reopens without "
+                         "re-deriving params and delta replay "
+                         "requantizes appends on the identical grid; "
+                         "this flag only surfaces it.)")
     args = ap.parse_args()
 
     if args.data:
@@ -110,6 +118,10 @@ def main() -> None:
     index = build_pyramid_index_parallel(
         x, cfg, workers=args.workers, verbose=True)
     t_build = time.time() - t0
+    if args.quantize:
+        qp = index.quant_params()   # publish persists this frozen grid
+        print(f"quantization grid: d={qp.d}, int8 "
+              f"(vector payload shrinks ~4x in quantize=True engines)")
     store = IndexStore(args.out)
     t0 = time.time()
     vid = store.publish(index, keep=args.gc_keep)

@@ -30,6 +30,13 @@ def main() -> None:
     ap.add_argument("--tokens", type=int, default=16)
     ap.add_argument("--retrieval", action="store_true",
                     help="kNN-LM interpolation via a Pyramid datastore")
+    ap.add_argument("--quantize", action="store_true",
+                    help="serve the retrieval datastore from the int8 "
+                         "arena (asymmetric distances + exact float32 "
+                         "rerank; ~4x smaller device vector payload)")
+    ap.add_argument("--rerank-factor", type=int, default=4,
+                    help="with --quantize: exact-rerank the top "
+                         "rerank_factor * k quantized candidates")
     ap.add_argument("--lam", type=float, default=0.3)
     args = ap.parse_args()
 
@@ -56,9 +63,13 @@ def main() -> None:
                             max_degree=12, max_degree_upper=6,
                             ef_construction=40, ef_search=60)
         ds = build_datastore(params, cfg, [corpus], pyr)
-        ds_client = open_datastore_client(ds)
+        ds_client = open_datastore_client(
+            ds, quantize=args.quantize, rerank_factor=args.rerank_factor)
+        stats = ds_client.stats()
         print(f"[serve] datastore ready: {ds.values.shape[0]} entries, "
-              f"served by {len(ds_client.stats()['executors'])} executors")
+              f"served by {len(stats['executors'])} executors "
+              f"(quantized={stats['quantized']}, "
+              f"arena vector bytes={stats['arena_vector_bytes']})")
 
     # everything past this point runs under the datastore engine (when
     # --retrieval): any failure must still shut its threads down, or the

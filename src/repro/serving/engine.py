@@ -60,9 +60,16 @@ from repro.core.arena import ShardArena
 from repro.core.client import (EngineShutdownError, QueryExpiredError,
                                SearchFuture)
 from repro.core.meta_index import PyramidIndex
-from repro.core.router import route_queries
+from repro.core.quant import exact_rerank_np
+from repro.core.router import effective_ef, route_queries
 from repro.kernels.merge_topk import merge_topk_np
 from repro.serving.faults import FaultSchedule
+
+
+# the engine's base meta-search beam for routing; route_queries raises
+# it to K when a caller's branching_factor is larger (stats()['routing']
+# surfaces that raise)
+_ROUTING_EF = 64
 
 
 @dataclasses.dataclass
@@ -149,14 +156,16 @@ class Executor(threading.Thread):
                  arena: ShardArena, metric: str, ef: int,
                  result_bus: "queue.Queue", heartbeat: Dict[str, float],
                  batch_max: int = 32, warm_k: int = 10,
-                 fault_tick=None, redispatch=None):
+                 fault_tick=None, redispatch=None, k_factor: int = 1):
         super().__init__(name=name, daemon=True)
         self.topic = topic
         self.shard_id = shard_id
         self.arena = arena
         # shared memoised view: every replica of every shard reads the
         # one engine-wide arena (equal shapes => one jit compile serves
-        # all executors; one HBM copy per engine, not per executor)
+        # all executors; one HBM copy per engine, not per executor).
+        # A quantized engine hands every executor an int8 view — the
+        # per-engine HBM vector payload is the compressed one.
         self.graph = arena.shard_view(shard_id)
         self.metric = metric
         self.ef = ef
@@ -164,6 +173,9 @@ class Executor(threading.Thread):
         self.heartbeat = heartbeat
         self.batch_max = batch_max
         self.warm_k = warm_k
+        # >1 on a quantized engine: partials carry k_factor * k
+        # candidates so the coordinator can exact-rerank the merged list
+        self.k_factor = k_factor
         self.fault_tick = fault_tick   # engine hook: batch-drain boundary
         self.redispatch = redispatch   # engine hook: bookkept requeue
         self.cpu_share = 1.0        # straggler injection: <1 adds sleep
@@ -212,20 +224,23 @@ class Executor(threading.Thread):
         caller k values cannot trigger unbounded mid-serving jit
         compiles — and trim per request, so mixed-k callers sharing the
         engine each get their own result width.
-        Returns ``[(ids [r.k], scores [r.k]) for r in batch]``.
+        Returns ``[(ids [r.k * k_factor], scores [...]) for r in batch]``
+        (``k_factor > 1`` on quantized engines: the wider partial feeds
+        the coordinator's exact rerank).
         """
-        k = max(r.k for r in batch)
+        k = max(r.k for r in batch) * self.k_factor
         k = 1 << (k - 1).bit_length()   # bucket: log-many compiles total
         vecs = np.stack([r.vector for r in batch])
         if len(batch) < self.batch_max:  # pad to the compiled shape
             pad = np.repeat(vecs[:1], self.batch_max - len(batch), axis=0)
             vecs = np.concatenate([vecs, pad], axis=0)
         ids, scores = H.hnsw_search(
-            self.graph, jnp.asarray(vecs), metric=self.metric, k=k,
-            ef=self.ef)
+            self.graph, jnp.asarray(vecs), metric=self.metric,
+            k=k, ef=max(self.ef, k))
         ids = np.asarray(ids)
         scores = np.asarray(scores)
-        return [(ids[i, : r.k], scores[i, : r.k])
+        return [(ids[i, : r.k * self.k_factor],
+                 scores[i, : r.k * self.k_factor])
                 for i, r in enumerate(batch)]
 
     def _throttle(self, busy_s: float) -> None:
@@ -445,6 +460,7 @@ class ServingEngine:
                  ef: Optional[int] = None, auto_restart: bool = True,
                  executor_batch: int = 16, warm_k: int = 10,
                  pending_deadline_s: Optional[float] = 300.0,
+                 quantize: bool = False, rerank_factor: int = 4,
                  hedge: bool = True,
                  hedge_deadline_s: Optional[float] = None,
                  hedge_percentile: float = 99.0,
@@ -467,6 +483,11 @@ class ServingEngine:
         # is failed with QueryExpiredError. None disables expiry.
         self.pending_deadline_s = pending_deadline_s
         self.expired = 0
+        # quantized serving: executors search the int8 arena and return
+        # rerank_factor * k candidates per shard; the merger exact-
+        # reranks the merged list against the host-side float32 table
+        self.quantize = quantize
+        self.rerank_factor = rerank_factor if quantize else 1
         # hedged dispatch: once a (query, shard) dispatch has waited
         # past hedge_factor * tracked p{hedge_percentile} (or the fixed
         # hedge_deadline_s override), re-enqueue it so a replica peer
@@ -486,7 +507,20 @@ class ServingEngine:
 
         self.meta_arrays = index.meta_arrays()
         self.part_of_center = jnp.asarray(index.part_of_center)
-        self.arena = index.arena()   # one device arena per engine
+        # one device arena per engine; int8 when quantized (the HBM
+        # vector payload shrinks ~4x — see index.arena docs)
+        self.arena = index.arena("int8" if quantize else "float32")
+        if quantize:   # host-side full-precision copy for exact rerank
+            self._rerank_table = index.rerank_table()
+        # Fig. 5 routing observability: running access-rate accumulators
+        # (shard hits / (queries * w)) and the branching factor the last
+        # submit routed with (a caller override changes what the meta
+        # search actually ran). The engine's base meta-search beam is
+        # _ROUTING_EF; routing raises it to K when K is larger — stats()
+        # reports both so the raise is observable.
+        self._routed_hits = 0
+        self._routed_queries = 0
+        self._routing_kb = self.cfg.branching_factor
 
         self.topics: List[queue.Queue] = [queue.Queue()
                                           for _ in range(self.w)]
@@ -524,7 +558,10 @@ class ServingEngine:
         append-only delta log, so every ``add_items`` that happened
         after the publish is served again — the recovered engine answers
         within the usual recall tolerance of the pre-crash one (see
-        ``tests/test_store.py``).
+        ``tests/test_store.py``). ``quantize=True`` (via ``engine_kw``)
+        reopens onto the manifest's frozen int8 grid — no re-derivation,
+        and replayed inserts requantize bit-identically
+        (``tests/test_quant.py``).
         """
         from repro.store import IndexStore
         index = IndexStore(store_path).load(
@@ -538,7 +575,8 @@ class ServingEngine:
                       self.result_bus, self.heartbeat,
                       batch_max=self.executor_batch, warm_k=self.warm_k,
                       fault_tick=self._fault_tick,
-                      redispatch=self._redispatch_inflight)
+                      redispatch=self._redispatch_inflight,
+                      k_factor=self.rerank_factor)
         # seed the heartbeat BEFORE the thread runs: an executor that
         # dies or hangs before its first beat must look stale, not
         # fresh-forever (the old ``heartbeat.get(name, now)`` bug)
@@ -643,12 +681,30 @@ class ServingEngine:
             submitted = self._qid
             hedged = self.hedged_queries
             redispatched = self.redispatched
+            routed_hits = self._routed_hits
+            routed_queries = self._routed_queries
+            routing_kb = self._routing_kb
         execs = {
             name: {"shard": ex.shard_id, "alive": ex.alive,
                    "processed": ex.processed, "cpu_share": ex.cpu_share}
             for name, ex in sorted(list(self.executors.items()))}
         return {
             "num_shards": self.w,
+            "quantized": self.quantize,
+            "rerank_factor": self.rerank_factor,
+            "arena_vector_bytes": self.arena.vector_nbytes,
+            # Fig. 5 routing metric: mean fraction of sub-HNSWs a
+            # submitted query touched (nan before any submit)
+            "access_rate": (routed_hits / (routed_queries * self.w)
+                            if routed_queries else float("nan")),
+            # what the last submit's meta routing actually searched
+            # with: the engine requests a _ROUTING_EF-wide beam and the
+            # router raises it to K when K is larger — requested !=
+            # effective IS the observable raise
+            "routing": {"requested_ef": _ROUTING_EF,
+                        "branching_factor": routing_kb,
+                        "effective_ef": effective_ef(
+                            _ROUTING_EF, routing_kb)},
             "replicas": {s: self.replica_count(s) for s in range(self.w)},
             "executors": execs,
             "pending_queries": pending,
@@ -709,7 +765,7 @@ class ServingEngine:
         mask, _ = route_queries(
             self.meta_arrays, self.part_of_center, jnp.asarray(q),
             metric=self.metric, branching_factor=kb, num_shards=self.w,
-            ef=max(64, kb))
+            ef=_ROUTING_EF)
         mask = np.asarray(mask)
         futures = []
         now = time.monotonic()
@@ -717,6 +773,11 @@ class ServingEngine:
             if self._shutdown:   # re-check: shutdown may have raced the
                 raise EngineShutdownError(  # routing work above
                     "engine is shut down")
+            # Fig. 5 metric: fraction of sub-HNSWs each query touches,
+            # plus the K this batch's meta routing actually used
+            self._routed_hits += int(mask.sum())
+            self._routed_queries += int(mask.shape[0])
+            self._routing_kb = kb
             for i in range(q.shape[0]):
                 qid = self._qid
                 self._qid += 1
@@ -859,11 +920,21 @@ class ServingEngine:
             # shared dedup-top-k merge (the same semantics the fused
             # arena pipeline runs on device via the merge_topk kernel);
             # concatenate in shard order so score ties break identically
-            # no matter which replica answered first
+            # no matter which replica answered first. A quantized engine
+            # merges the wider rerank_factor * k candidate list, then
+            # exact-reranks it against the float32 table so the caller
+            # sees full-precision scores and float-path recall.
             parts = [entry.parts[s] for s in sorted(entry.parts)]
             ids = np.concatenate([p.ids for p in parts])[None, :]
             scores = np.concatenate([p.scores for p in parts])[None, :]
-            top_scores, top_ids = merge_topk_np(scores, ids, k=entry.req.k)
+            top_scores, top_ids = merge_topk_np(
+                scores, ids, k=entry.req.k * self.rerank_factor)
+            if self.quantize:
+                table_ids, table_vecs = self._rerank_table
+                top_ids, top_scores = exact_rerank_np(
+                    entry.req.vector[None, :], top_ids, entry.req.k,
+                    table_ids=table_ids, table_vecs=table_vecs,
+                    metric=self.metric)
             found = top_ids[0] >= 0
             entry.fut.set_result(QueryResult(
                 entry.req.query_id, top_ids[0][found],

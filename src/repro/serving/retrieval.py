@@ -74,12 +74,15 @@ def hidden_states(params, cfg: ArchConfig, tokens) -> jnp.ndarray:
     return hid
 
 
-def open_datastore_client(datastore: Datastore, *,
-                          replicas: int = 1) -> PyramidClient:
+def open_datastore_client(datastore: Datastore, *, replicas: int = 1,
+                          **engine_kw) -> PyramidClient:
     """Serve ``datastore.index`` through the distributed engine; the
     returned session feeds ``knn_probs(..., client=...)``. Callers own
-    teardown: ``client.engine.shutdown()``."""
-    return PyramidClient.from_index(datastore.index, replicas=replicas)
+    teardown: ``client.engine.shutdown()``. Engine kwargs pass through —
+    ``quantize=True`` serves the datastore from the int8 arena (hidden-
+    state datastores are where the ~4x HBM saving bites first)."""
+    return PyramidClient.from_index(datastore.index, replicas=replicas,
+                                    **engine_kw)
 
 
 def _search_via_client(client: PyramidClient, queries: np.ndarray, k: int,

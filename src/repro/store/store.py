@@ -367,6 +367,19 @@ class IndexStore:
                 "meta": meta_entry,
                 "shards": shard_entries,
             }
+            # persist the frozen int8 grid on every publish of a
+            # non-empty index: a reopened index must requantize on the
+            # IDENTICAL grid (not re-derive one from post-replay data),
+            # or its codes would drift from the pre-restart engine's.
+            # Deriving here also freezes the live index's grid at
+            # publish time, so an engine that turns quantize=True on
+            # later (pre- or post-crash) lands on the same grid as its
+            # recovery path. Cost: one min/max pass over data publish
+            # already reads in full for checksums. An all-empty index
+            # (every shard zero items) has nothing to quantize — skip
+            # rather than fail the publish.
+            if any(g.n for g in index.subs):
+                manifest["quant"] = index.quant_params().to_manifest()
             # segment dir entries must be durable BEFORE the rename
             # makes the version discoverable (a complete-looking
             # manifest must never reference files lost to power loss)
@@ -468,6 +481,14 @@ class IndexStore:
             config=reader.config, meta=meta,
             part_of_center=part_of_center, subs=subs,
             build_stats=dict(reader.manifest.get("build_stats", {})))
+        if "quant" in reader.manifest:
+            # attach BEFORE delta replay: replayed inserts requantize
+            # through the same frozen grid as the live engine did, so
+            # the rebuilt int8 arena is bit-identical to the pre-crash
+            # one (tests/test_quant.py asserts the codes)
+            from repro.core.quant import QuantParams
+            index.attach_quant_params(
+                QuantParams.from_manifest(reader.manifest["quant"]))
         delta = reader.delta_log()
         if replay_delta:
             from repro.core.updates import add_items

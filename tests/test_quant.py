@@ -1,0 +1,347 @@
+"""Quantized ShardArena: float32-vs-int8 parity on all three metrics,
+exact-rerank semantics, quantize/dequantize round-trip properties,
+frozen-grid store persistence, and the >= 3x memory contract."""
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.arena import QuantizedShardArena
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+from repro.core.quant import QuantParams, exact_rerank_np
+from repro.data.synthetic import clustered_vectors
+
+RERANK = 4
+
+
+def _mips_data(seed=0, n=2000, d=12):
+    rng = np.random.default_rng(seed)
+    dirs = rng.normal(size=(16, d))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    asg = rng.integers(0, 16, size=n)
+    x = dirs[asg] + 0.2 * rng.normal(size=(n, d))
+    norms = rng.lognormal(mean=0.0, sigma=0.8, size=(n, 1))
+    return (x * norms).astype(np.float32), \
+        rng.normal(size=(48, d)).astype(np.float32)
+
+
+def _build(x, metric, replication_r=0, num_shards=4):
+    cfg = PyramidConfig(metric=metric, num_shards=num_shards, meta_size=48,
+                        sample_size=1200, branching_factor=2,
+                        max_degree=12, max_degree_upper=6,
+                        ef_construction=40, ef_search=60,
+                        replication_r=replication_r, kmeans_iters=6)
+    return build_pyramid_index(x, cfg)
+
+
+_CACHE = {}
+
+
+def _fixture(metric):
+    if metric not in _CACHE:
+        if metric == "ip":
+            x, q = _mips_data(seed=3)
+            idx = _build(x, metric, replication_r=40)
+        else:
+            x = clustered_vectors(2000, 12, 16, seed=1)
+            rng = np.random.default_rng(2)
+            q = x[rng.choice(2000, 48)] + 0.01 * rng.normal(
+                size=(48, 12)).astype(np.float32)
+            idx = _build(x, metric)
+        xn = M.preprocess_dataset(x, metric)
+        qn = M.preprocess_queries(q, metric)
+        true_ids, _ = M.brute_force_topk(qn, xn, 10, metric)
+        _CACHE[metric] = (idx, x, q, true_ids)
+    return _CACHE[metric]
+
+
+def _recall(ids, true_ids):
+    return sum(len(set(np.asarray(a).tolist()) & set(b.tolist()))
+               for a, b in zip(ids, true_ids)) / true_ids.size
+
+
+# ---------------------------------------------------------------------------
+# float32 vs int8 parity (tentpole acceptance: recall within 1%)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("metric", ["l2", "angular", "ip"])
+def test_int8_recall_within_1pct_of_float(metric):
+    idx, x, q, true_ids = _fixture(metric)
+    ids_f, _, _ = search_single_host(idx, q, k=10)
+    ids_q, scores_q, _ = search_single_host(
+        idx, q, k=10, quantize=True, rerank_factor=RERANK)
+    r_f, r_q = _recall(ids_f, true_ids), _recall(ids_q, true_ids)
+    assert r_q >= r_f - 0.01, (metric, r_f, r_q)
+    # no duplicate ids may survive the merge + rerank
+    for row in np.asarray(ids_q):
+        valid = row[row >= 0]
+        assert len(set(valid.tolist())) == len(valid), row
+    # rerank output is descending with (-1, -inf) suffix padding
+    for rs, ri in zip(np.asarray(scores_q), np.asarray(ids_q)):
+        valid = ri >= 0
+        assert (np.diff(rs[valid]) <= 1e-6).all()
+        assert not np.any(np.diff(valid.astype(int)) > 0)
+
+
+def test_int8_memory_reduction_at_least_3x():
+    idx, *_ = _fixture("l2")
+    af = idx.arena("float32")
+    aq = idx.arena("int8")
+    assert isinstance(aq, QuantizedShardArena)
+    assert aq.data.dtype == jnp.int8
+    reduction = af.vector_nbytes / aq.vector_nbytes
+    assert reduction >= 3.0, reduction
+    # adjacency/ids are identical across the two arena forms
+    np.testing.assert_array_equal(np.asarray(af.ids), np.asarray(aq.ids))
+    np.testing.assert_array_equal(np.asarray(af.bottom),
+                                  np.asarray(aq.bottom))
+
+
+def test_quant_arena_memoised_and_invalidated():
+    from repro.core.updates import add_items
+    x = clustered_vectors(1200, 8, 8, seed=20)
+    idx = _build(x, "l2")
+    af, aq = idx.arena(), idx.arena("int8")
+    assert idx.arena() is af and idx.arena("int8") is aq   # per-dtype memo
+    qp = idx.quant_params()
+    add_items(idx, clustered_vectors(40, 8, 4, seed=21))
+    assert idx.arena("int8") is not aq        # arena invalidated...
+    assert idx.quant_params() is qp           # ...but the grid is frozen
+    with pytest.raises(ValueError):
+        idx.arena("bf16")
+
+
+# ---------------------------------------------------------------------------
+# exact rerank semantics
+# ---------------------------------------------------------------------------
+
+
+def test_rerank_scores_are_exact_float32():
+    """Every score the quantized path returns must equal the exact
+    float32 similarity of that (query, item) pair — the rerank removes
+    quantization error from the reported scores entirely."""
+    idx, x, q, _ = _fixture("l2")
+    ids_q, scores_q, _ = search_single_host(
+        idx, q, k=10, quantize=True, rerank_factor=RERANK)
+    xn = M.preprocess_dataset(x, "l2")
+    qn = M.preprocess_queries(q, "l2")
+    for i in range(len(q)):
+        valid = ids_q[i] >= 0
+        want = M.similarity_matrix_np(
+            qn[i][None, :], xn[ids_q[i][valid]], "l2")[0]
+        # 1-ulp slack: the rerank batches a different candidate row set
+        # than this direct check, so the matmul may reassociate
+        np.testing.assert_allclose(scores_q[i][valid], want, rtol=1e-5,
+                                   atol=1e-6)
+
+
+def test_rerank_exactness_on_ties():
+    """Exact duplicate vectors (distinct ids) are exact score ties: the
+    rerank must give them bit-equal scores and break the tie by the
+    incoming quantized rank (stable), deterministically."""
+    rng = np.random.default_rng(5)
+    base = rng.normal(size=(8, 6)).astype(np.float32)
+    table_ids = np.arange(16, dtype=np.int64)
+    table_vecs = np.concatenate([base, base])   # ids i and i+8 identical
+    q = (base[:4] + 0.01 * rng.normal(size=(4, 6))).astype(np.float32)
+    # candidate lists contain both copies, the duplicate listed SECOND
+    cand = np.stack([
+        np.array([i, i + 8, (i + 1) % 8, -1], np.int64)
+        for i in range(4)])
+    ids1, scores1 = exact_rerank_np(
+        q, cand, 3, table_ids=table_ids, table_vecs=table_vecs,
+        metric="l2")
+    ids2, scores2 = exact_rerank_np(
+        q, cand, 3, table_ids=table_ids, table_vecs=table_vecs,
+        metric="l2")
+    np.testing.assert_array_equal(ids1, ids2)          # deterministic
+    np.testing.assert_array_equal(scores1, scores2)
+    for i in range(4):
+        # both copies returned, tied bit-for-bit, incoming order kept
+        assert ids1[i][0] == i and ids1[i][1] == i + 8, ids1[i]
+        assert scores1[i][0] == scores1[i][1]
+        want = M.similarity_matrix_np(
+            q[i][None, :], table_vecs[ids1[i]], "l2")[0]
+        np.testing.assert_allclose(scores1[i], want, rtol=1e-6)
+
+
+def test_rerank_drops_unknown_ids_and_handles_empty_rows():
+    table_ids = np.array([2, 5, 9], np.int64)
+    table_vecs = np.eye(3, dtype=np.float32)
+    q = np.ones((2, 3), np.float32)
+    cand = np.array([[5, 777, -1], [-1, -1, -1]], np.int64)
+    ids, scores = exact_rerank_np(q, cand, 2, table_ids=table_ids,
+                                  table_vecs=table_vecs, metric="ip")
+    assert ids[0].tolist() == [5, -1]
+    assert np.isneginf(scores[0][1])
+    assert (ids[1] == -1).all() and np.isneginf(scores[1]).all()
+
+
+# ---------------------------------------------------------------------------
+# quantize/dequantize round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_round_trip_error_bounded_by_half_step():
+    rng = np.random.default_rng(0)
+    x = (rng.normal(size=(500, 16)) * rng.uniform(
+        0.1, 50.0, size=(1, 16))).astype(np.float32)
+    p = QuantParams.from_data(x)
+    codes = p.quantize(x)
+    err = np.abs(p.dequantize(codes) - x)
+    bound = p.scale / 2 + 1e-4 * (1 + np.abs(p.zero))
+    assert (err <= bound).all(), float((err - bound).max())
+    # codes are a fixed point of dequantize-then-quantize
+    np.testing.assert_array_equal(p.quantize(p.dequantize(codes)), codes)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    given = None
+
+if given is not None:
+
+    @st.composite
+    def float_blocks(draw):
+        n = draw(st.integers(1, 40))
+        d = draw(st.integers(1, 8))
+        rows = draw(st.lists(
+            st.lists(st.floats(-1e4, 1e4, width=32), min_size=d,
+                     max_size=d),
+            min_size=n, max_size=n))
+        return np.asarray(rows, np.float32)
+
+    @settings(max_examples=40, deadline=None)
+    @given(float_blocks())
+    def test_property_quantize_dequantize_round_trip(x):
+        p = QuantParams.from_data(x)
+        codes = p.quantize(x)
+        assert codes.dtype == np.int8
+        assert codes.min() >= -127 and codes.max() <= 127
+        err = np.abs(p.dequantize(codes) - x)
+        bound = p.scale / 2 + 1e-3 * (1 + np.abs(p.zero))
+        assert (err <= bound).all()
+        np.testing.assert_array_equal(
+            p.quantize(p.dequantize(codes)), codes)
+
+    @settings(max_examples=40, deadline=None)
+    @given(float_blocks())
+    def test_property_grid_is_deterministic(x):
+        p1, p2 = QuantParams.from_data(x), QuantParams.from_data(x.copy())
+        np.testing.assert_array_equal(p1.scale, p2.scale)
+        np.testing.assert_array_equal(p1.zero, p2.zero)
+
+
+# ---------------------------------------------------------------------------
+# store persistence: frozen grid, bit-identical reopen + replay
+# ---------------------------------------------------------------------------
+
+
+def test_store_reopen_parity_for_quantized_manifest():
+    from repro.core.updates import add_items
+    from repro.store import IndexStore
+
+    x = clustered_vectors(1200, 8, 8, seed=30)
+    idx = _build(x, "l2")
+    qp = idx.quant_params()           # freeze the grid pre-publish
+    rng = np.random.default_rng(31)
+    q = x[rng.choice(1200, 16)] + 0.01 * rng.normal(
+        size=(16, 8)).astype(np.float32)
+    with tempfile.TemporaryDirectory() as tmp:
+        store = IndexStore(tmp)
+        store.publish(idx)
+        # insert AFTER publish: reopen must replay through the journal
+        # and requantize the appended rows on the frozen grid
+        add_items(idx, clustered_vectors(50, 8, 4, seed=32))
+        loaded = store.load()
+        qp2 = loaded.quant_params()
+        np.testing.assert_array_equal(qp.scale, qp2.scale)   # no
+        np.testing.assert_array_equal(qp.zero, qp2.zero)     # re-derive
+        live, reopened = idx.arena("int8"), loaded.arena("int8")
+        np.testing.assert_array_equal(            # codes bit-identical
+            np.asarray(live.data), np.asarray(reopened.data))
+        ids_live, s_live, _ = search_single_host(
+            idx, q, k=10, quantize=True)
+        ids_re, s_re, _ = search_single_host(
+            loaded, q, k=10, quantize=True)
+        np.testing.assert_array_equal(ids_live, ids_re)
+        np.testing.assert_array_equal(s_live, s_re)
+
+
+def test_from_store_serves_quantized_without_requantizing():
+    from repro.serving.engine import ServingEngine
+    from repro.store import IndexStore
+
+    idx, x, q, true_ids = _fixture("angular")
+    qp = idx.quant_params()
+    with tempfile.TemporaryDirectory() as tmp:
+        IndexStore(tmp).publish(idx)
+        eng = ServingEngine.from_store(tmp, replicas=1, quantize=True)
+        try:
+            # the engine's grid IS the manifest's (no re-derivation)
+            np.testing.assert_array_equal(
+                eng.index.quant_params().scale, qp.scale)
+            res = [f.result(60) for f in eng.submit(q, k=10)]
+            st = eng.stats()
+        finally:
+            eng.shutdown()
+    assert st["quantized"] and st["rerank_factor"] == 4
+    assert 0.0 < st["access_rate"] <= 1.0
+    assert (st["routing"]["effective_ef"]
+            >= st["routing"]["requested_ef"])
+    assert st["routing"]["branching_factor"] == 2
+    r_eng = _recall([r.ids for r in res], true_ids)
+    ids_f, _, _ = search_single_host(idx, q, k=10)
+    assert r_eng >= _recall(ids_f, true_ids) - 0.01, r_eng
+
+
+def test_spmd_quantized_path_parity():
+    import jax
+
+    from repro.core.distributed import make_pyramid_search_fn
+
+    idx, x, q, true_ids = _fixture("l2")
+    mesh = jax.make_mesh((1,), ("model",))
+    fn = make_pyramid_search_fn(
+        mesh, idx.config, k=10, batch=len(q), ef=idx.config.ef_search,
+        quantize=True, rerank_factor=RERANK, index=idx)
+    qn = M.preprocess_queries(q, "l2")
+    ids_spmd, scores_spmd = fn(
+        idx.arena("int8"), idx.meta_arrays(),
+        jnp.asarray(idx.part_of_center), jnp.asarray(qn))
+    ids_host, _, _ = search_single_host(idx, q, k=10)
+    assert _recall(ids_spmd, true_ids) >= _recall(ids_host, true_ids) - 0.01
+    with pytest.raises(ValueError):   # rerank table requires the index
+        make_pyramid_search_fn(mesh, idx.config, k=10, batch=len(q),
+                               quantize=True)
+
+
+# ---------------------------------------------------------------------------
+# routing satellites
+# ---------------------------------------------------------------------------
+
+
+def test_route_queries_warns_once_when_ef_raised():
+    import warnings
+
+    from repro.core import router
+    idx, x, q, _ = _fixture("l2")
+    qn = M.preprocess_queries(q, "l2")
+    router._EF_RAISED_WARNED.clear()
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        for _ in range(2):
+            mask, _ = router.route_queries(
+                idx.meta_arrays(), jnp.asarray(idx.part_of_center),
+                jnp.asarray(qn), metric="l2", branching_factor=8,
+                num_shards=idx.num_shards, ef=2)
+    warns = [w for w in caught if "route_queries" in str(w.message)]
+    assert len(warns) == 1, [str(w.message) for w in caught]
+    assert router.effective_ef(2, 8) == 8
+    assert np.asarray(mask).any()
