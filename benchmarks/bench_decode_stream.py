@@ -1,0 +1,220 @@
+"""Streaming retrieval-decode benchmark: tokens/s of the prefill /
+insert / generate_step engine (`repro.serving.stream`) with every decode
+step issuing one batched kNN lookup through the distributed engine's
+futures surface against the int8 ``QuantizedShardArena``.
+
+Grid: datastore size x concurrent sessions, each measured with the
+double-buffered retrieval/decode overlap ON and OFF (``overlap=False``
+is the serialized await-every-step baseline — identical tokens, no
+latency hiding), plus a rerank_factor sweep at the largest config.
+
+Row fields the CI gate consumes (benchmarks/bench_gate.py):
+  * ``qps_overlap`` / ``qps_serialized`` — tokens/s (the "qps" leaves,
+    gated at -30% aggregate on --quick runs);
+  * ``recall_knn_hit`` — fraction of sampled tokens found among that
+    step's retrieved memories. Decode is greedy and the search path is
+    deterministic, so this is exactly reproducible: any drift means the
+    retrieval results changed (the "recall" leaves, gated per-leaf).
+
+Shard servers emulate the paper's REMOTE deployment: each executor
+sleeps ``NET_DELAY_S`` per drained batch (RPC round-trip; pure latency,
+no CPU) and lingers ``LINGER_S`` to coalesce a slot-group's fanned-out
+queries into one padded op. ``REPLICAS = 2`` per shard is what makes
+double-buffering pay: with a single replica the two slot groups' batches
+queue behind each other's round-trip and there is nothing to pipeline
+into. Hedging is off so both overlap modes issue identical search ops.
+
+Writes ``BENCH_decode_stream.json``; at full (non --quick) scale the
+summary additionally asserts overlap beats serialized at the largest
+config.
+
+PYTHONPATH=src python -m benchmarks.bench_decode_stream [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.common.config import PyramidConfig
+from repro.common.registry import get_arch
+from repro.models.transformer import init_params
+from repro.serving.batcher import Request
+from repro.serving.retrieval import Datastore, build_datastore
+from repro.serving.stream import StreamEngine
+
+RERANK_FACTOR = 4
+PROMPT_LEN = 12
+# remote-shard emulation (see module docstring)
+NET_DELAY_S = 0.040
+LINGER_S = 0.002
+REPLICAS = 2
+EXECUTOR_BATCH = 8
+
+
+def _datastore(params, cfg, n_seqs: int, seq_len: int,
+               shards: int) -> Datastore:
+    rng = np.random.default_rng(11)
+    corpus = rng.integers(0, cfg.vocab_size,
+                          size=(n_seqs, seq_len)).astype(np.int32)
+    n = n_seqs * (seq_len - 1)
+    pyr = PyramidConfig(
+        metric="l2", num_shards=shards,
+        meta_size=min(64, max(shards, n // 16)),
+        sample_size=min(n, 4_000), branching_factor=2, max_degree=12,
+        max_degree_upper=6, ef_construction=40, ef_search=60,
+        kmeans_iters=6, seed=0)
+    batches = np.array_split(corpus, max(1, n_seqs // 64))
+    return build_datastore(params, cfg, batches, pyr)
+
+
+def _requests(cfg, sessions: int, n_new: int, seed: int):
+    rng = np.random.default_rng(seed)
+    return [Request(i, rng.integers(0, cfg.vocab_size,
+                                    size=PROMPT_LEN).astype(np.int32),
+                    max_new_tokens=n_new) for i in range(sessions)]
+
+
+def _run_engine(params, cfg, ds, reqs, *, overlap: bool, num_slots: int,
+                max_seq: int, rerank_factor: int = RERANK_FACTOR):
+    with StreamEngine(params, cfg, num_slots=num_slots, max_seq=max_seq,
+                      datastore=ds, knn_k=8, lam=0.25, overlap=overlap,
+                      quantize=True, rerank_factor=rerank_factor,
+                      replicas=REPLICAS, hedge=False,
+                      executor_batch=EXECUTOR_BATCH,
+                      linger_s=LINGER_S, net_delay_s=NET_DELAY_S) as eng:
+        for r in reqs:
+            eng.submit(r)
+        done = eng.run_until_drained()
+        st = eng.stats()
+    assert len(done) == len(reqs), (len(done), len(reqs))
+    tokens = {c.request_id: c.tokens for c in done}
+    return tokens, st
+
+
+def run(quick: bool = False) -> dict:
+    cfg = get_arch("qwen3-1.7b").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    if quick:
+        sizes = [(16, 17), (32, 17)]          # (n_seqs, seq_len)
+        concurrency = [2, 4]
+        num_slots, n_new, max_seq, shards = 4, 8, 32, 2
+        rerank_factors = [1, 4]
+    else:
+        sizes = [(64, 33), (256, 33)]
+        concurrency = [4, 16]
+        num_slots, n_new, max_seq, shards = 8, 16, 48, 4
+        rerank_factors = [1, 2, 4, 8]
+
+    # warm the jit caches (decode-step per group width + prefill per
+    # prompt length) on a throwaway datastore so no timed run pays
+    # compile time
+    warm_ds = _datastore(params, cfg, 8, PROMPT_LEN + 3, 2)
+    warm = _requests(cfg, 2, 2, seed=99)
+    for ov in (True, False):
+        _run_engine(params, cfg, warm_ds, warm, overlap=ov,
+                    num_slots=num_slots, max_seq=max_seq)
+
+    rows = []
+    largest = None
+    for n_seqs, seq_len in sizes:
+        ds = _datastore(params, cfg, n_seqs, seq_len, shards)
+        entries = int(ds.values.shape[0])
+        # one throwaway pass per datastore: the int8 arena is built
+        # lazily on first search and cached on the index — without this
+        # the first timed variant pays the whole quantization pass
+        _run_engine(params, cfg, ds, _requests(cfg, 2, 2, seed=98),
+                    overlap=True, num_slots=num_slots, max_seq=max_seq)
+        for sessions in concurrency:
+            reqs = _requests(cfg, sessions, n_new, seed=sessions)
+            tok_o, st_o = _run_engine(params, cfg, ds, reqs,
+                                      overlap=True,
+                                      num_slots=num_slots,
+                                      max_seq=max_seq)
+            tok_s, st_s = _run_engine(params, cfg, ds, reqs,
+                                      overlap=False,
+                                      num_slots=num_slots,
+                                      max_seq=max_seq)
+            assert tok_o == tok_s, "overlap changed decode semantics"
+            ret = st_o["retrieval"]
+            row = {
+                "datastore_entries": entries, "sessions": sessions,
+                "num_slots": num_slots, "knn_k": 8,
+                "rerank_factor": RERANK_FACTOR,
+                "replicas": REPLICAS,
+                "net_delay_ms": round(1e3 * NET_DELAY_S, 1),
+                "tokens": st_o["tokens_emitted"],
+                "qps_overlap": round(st_o["tokens_per_s"], 1),
+                "qps_serialized": round(st_s["tokens_per_s"], 1),
+                "overlap_speedup": round(
+                    st_o["tokens_per_s"] / st_s["tokens_per_s"], 3),
+                "recall_knn_hit": round(ret["knn_hit_rate"], 4),
+                "retrieval_p50_ms": round(1e3 * ret["latency_p50_s"], 3),
+                "retrieval_p99_ms": round(1e3 * ret["latency_p99_s"], 3),
+                "wait_p50_ms": round(
+                    1e3 * st_o["retrieval"]["wait_p50_s"], 3),
+            }
+            rows.append(row)
+            largest = (ds, row)
+            C.emit(f"decode_stream_n{entries}_c{sessions}",
+                   1e6 / max(row["qps_overlap"], 1e-9),
+                   f"tok/s={row['qps_overlap']} "
+                   f"(serialized {row['qps_serialized']}), "
+                   f"knn_hit={row['recall_knn_hit']}")
+
+    # rerank_factor sweep at the largest (datastore, concurrency) config
+    ds, _ = largest
+    sweep = []
+    for rf in rerank_factors:
+        reqs = _requests(cfg, concurrency[-1], n_new, seed=7)
+        tok, st = _run_engine(params, cfg, ds, reqs, overlap=True,
+                              num_slots=num_slots, max_seq=max_seq,
+                              rerank_factor=rf)
+        ret = st["retrieval"]
+        sweep.append({
+            "rerank_factor": rf,
+            "datastore_entries": int(ds.values.shape[0]),
+            "sessions": concurrency[-1],
+            "qps_overlap": round(st["tokens_per_s"], 1),
+            "recall_knn_hit": round(ret["knn_hit_rate"], 4),
+            "retrieval_p50_ms": round(1e3 * ret["latency_p50_s"], 3),
+            "retrieval_p99_ms": round(1e3 * ret["latency_p99_s"], 3),
+        })
+
+    big = rows[-1]
+    summary = {
+        "largest_config": {
+            "datastore_entries": big["datastore_entries"],
+            "sessions": big["sessions"],
+        },
+        "overlap_speedup_largest": big["overlap_speedup"],
+    }
+    return {"quick": quick, "rows": rows, "rerank_sweep": sweep,
+            "summary": summary}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    payload = run(quick=args.quick)
+    C.write_bench(args.out, "decode_stream", payload)
+    json.dump({"figure": "decode_stream", **payload}, sys.stdout, indent=2)
+    print()
+    speedup = payload["summary"]["overlap_speedup_largest"]
+    if not args.quick and speedup <= 1.0:
+        # the whole point of double-buffering: at the largest config the
+        # hidden retrieval latency must show up as throughput
+        print(f"DECODE STREAM GATE FAILED: overlap speedup {speedup} "
+              f"<= 1.0 at the largest config", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,12 +1,13 @@
 """Continuous batching: more requests than decode slots, slots recycled
 as sequences finish (vLLM-style scheduling on this framework).
 
-This drives the LM decode engine (`serving.batcher`); similarity-search
-traffic has the analogous asynchronous surface in
-`repro.core.client.PyramidClient` — `search_batch` returns
-`SearchFuture`s and `as_completed` streams merges as they land, so a
-retrieval-augmented decode loop can overlap lookups with decoding
-(see API.md and examples/serve_cluster.py).
+This drives the streaming engine (`serving.stream`) in LM-only mode
+(datastore=None): the explicit prefill / insert / generate_step surface
+of JetStream-style serving, with tokens streamed back per step. The
+same engine pointed at a Pyramid datastore turns every decode step into
+a batched similarity query (see examples/retrieval_decode.py); the
+simpler fixed-loop scheduler lives on as `serving.batcher.
+ContinuousBatcher` and produces identical greedy tokens.
 
 PYTHONPATH=src python examples/continuous_batching.py
 """
@@ -17,8 +18,9 @@ import numpy as np
 
 from repro.common.registry import get_arch
 from repro.models.transformer import init_params
-from repro.serving.batcher import ContinuousBatcher, Request
+from repro.serving.batcher import Request
 from repro.serving.sampler import SamplerConfig
+from repro.serving.stream import StreamEngine
 
 
 def main() -> None:
@@ -26,23 +28,30 @@ def main() -> None:
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 
-    batcher = ContinuousBatcher(
-        params, cfg, num_slots=4, max_seq=48,
-        sampler=SamplerConfig(greedy=True))
+    eng = StreamEngine(params, cfg, num_slots=4, max_seq=48,
+                       sampler=SamplerConfig(greedy=True))
 
     n_reqs = 10
-    for i in range(n_reqs):
-        plen = int(rng.integers(4, 12))
-        prompt = rng.integers(0, cfg.vocab_size, size=plen).astype(np.int32)
-        batcher.submit(Request(i, prompt, max_new_tokens=int(
-            rng.integers(4, 10))))
+    with eng:
+        for i in range(n_reqs):
+            plen = int(rng.integers(4, 12))
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  size=plen).astype(np.int32)
+            sess = eng.prefill(Request(i, prompt, max_new_tokens=int(
+                rng.integers(4, 10))))
+            eng.insert(sess)
 
-    t0 = time.time()
-    done = batcher.run_until_drained()
-    dt = time.time() - t0
+        t0 = time.time()
+        streamed = 0
+        while eng.has_work():
+            streamed += len(eng.generate_step())   # [(req id, token)]
+        dt = time.time() - t0
+        done = eng.done
+
     total_tokens = sum(len(c.tokens) for c in done)
+    assert streamed == total_tokens
     print(f"{len(done)} requests, {total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens/dt:.1f} tok/s) on 4 slots")
+          f"({total_tokens / dt:.1f} tok/s) on {eng.num_slots} slots")
     for c in sorted(done, key=lambda c: c.request_id):
         print(f"  req {c.request_id}: prompt={c.prompt_len} "
               f"generated={len(c.tokens)} ids={c.tokens[:8]}")

@@ -4,6 +4,13 @@ Trains a small qwen3-family model for a few steps, builds a Pyramid
 datastore from its hidden states, then decodes with kNN interpolation —
 the paper's technique as a first-class serving feature (DESIGN.md §4).
 
+Two parts:
+  1. the anatomy of one retrieval step — hidden-state query through the
+     futures client, kNN vocab distribution, interpolation;
+  2. the streaming engine (`repro.serving.stream`) doing the same thing
+     continuously: prefill / insert / generate_step with the per-step
+     batched lookup double-buffered behind the next decode step.
+
 PYTHONPATH=src python examples/retrieval_decode.py
 """
 import jax
@@ -13,10 +20,12 @@ import numpy as np
 from repro.common.config import PyramidConfig
 from repro.common.registry import get_arch
 from repro.data.synthetic import SyntheticLM
-from repro.models.transformer import init_params
+from repro.models.transformer import forward, init_params
+from repro.serving.batcher import Request
 from repro.serving.retrieval import (build_datastore, hidden_states,
                                      interpolate, knn_probs,
                                      open_datastore_client)
+from repro.serving.stream import StreamEngine
 
 
 def main() -> None:
@@ -33,21 +42,18 @@ def main() -> None:
     print(f"datastore: {ds.values.shape[0]} (hidden -> next-token) entries "
           f"across {ds.index.num_shards} sub-HNSWs")
 
-    # serve the datastore through the distributed engine: lookups go via
-    # the futures-based PyramidClient session (see API.md)
-    client = open_datastore_client(ds)
-    try:
-        # decode continuation for a prompt the datastore has memorised
-        prompt = corpus[:2, :16]
+    # -- part 1: one retrieval step, by hand ------------------------------
+    # the datastore client owns its serving engine and is a context
+    # manager — the with-block is the teardown (no manual
+    # engine.shutdown() to forget)
+    prompt = corpus[:2, :16]
+    with open_datastore_client(ds) as client:
         hid = np.asarray(hidden_states(params, cfg, jnp.asarray(prompt)),
                          np.float32)
         q = hid[:, -1]                     # current-position hidden state
         kp = knn_probs(ds, q, k=8, vocab_size=cfg.vocab_size,
                        client=client)
-    finally:
-        client.engine.shutdown()
 
-    from repro.models.transformer import forward
     logits, _, _ = forward(params, cfg, jnp.asarray(prompt))
     lm_logits = np.asarray(logits[:, -1], np.float32)
 
@@ -58,7 +64,28 @@ def main() -> None:
     print(f"kNN-only argmax:           {kp.argmax(-1)}")
     print(f"interpolated argmax:       {mixed.argmax(-1)}")
     print("(the kNN memory recovers memorised continuations an untrained "
-          "LM cannot)")
+        "LM cannot)")
+
+    # -- part 2: the streaming engine doing it continuously ---------------
+    # every decode step issues ONE batched kNN lookup for all active
+    # slots, resolved while the other slot group's decode step runs
+    # (overlap=True); the int8 arena serves the datastore (quantize=True)
+    print("\nstreaming decode: prefill / insert / generate_step ...")
+    with StreamEngine(params, cfg, num_slots=4, max_seq=48,
+                      datastore=ds, knn_k=8, lam=0.5,
+                      quantize=True, rerank_factor=4) as eng:
+        for i in range(6):
+            eng.submit(Request(i, corpus[i, :16].astype(np.int32),
+                               max_new_tokens=8))
+        while eng.has_work():
+            for rid, tok in eng.generate_step():
+                print(f"  req {rid} -> token {tok}")
+        st = eng.stats()
+    print(f"{st['sessions']['completed']} sessions, "
+          f"{st['tokens_emitted']} tokens at "
+          f"{st['tokens_per_s']:.1f} tok/s; per-step retrieval p50 "
+          f"{st['retrieval']['latency_p50_s'] * 1e3:.2f} ms, kNN hit rate "
+          f"{st['retrieval']['knn_hit_rate']:.2f}")
 
 
 if __name__ == "__main__":

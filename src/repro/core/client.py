@@ -49,7 +49,7 @@ import queue
 import threading
 import time
 from typing import (TYPE_CHECKING, Callable, Iterable, Iterator, List,
-                    Optional)
+                    Optional, Tuple)
 
 import numpy as np
 
@@ -199,6 +199,30 @@ def gather(futures: Iterable[SearchFuture],
                 raise
             out.append(exc)
     return out
+
+
+def gather_arrays(futures: Iterable[SearchFuture], k: int,
+                  timeout: Optional[float] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Bulk-resolve a batch of futures into dense ``(ids [B, k] int64,
+    scores [B, k] float32)`` arrays in submit order, under ONE shared
+    deadline.
+
+    Short results are padded with ``-1`` ids / ``-inf`` scores; results
+    wider than ``k`` are trimmed. This is the per-step bulk path the
+    streaming decode engine (``repro.serving.stream``) and the kNN-LM
+    vocab scatter (``repro.serving.retrieval.knn_probs``) consume: one
+    call per decode step resolves every active slot's lookup at once
+    instead of shaping each future's result separately.
+    """
+    futures = list(futures)
+    ids = np.full((len(futures), k), -1, np.int64)
+    scores = np.full((len(futures), k), -np.inf, np.float32)
+    for i, r in enumerate(gather(futures, timeout)):
+        n = min(len(r.ids), k)
+        ids[i, :n] = r.ids[:n]
+        scores[i, :n] = r.scores[:n]
+    return ids, scores
 
 
 def as_completed(futures: Iterable[SearchFuture],

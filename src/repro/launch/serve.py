@@ -7,6 +7,7 @@ PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 16
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import jax
@@ -54,32 +55,33 @@ def main() -> None:
 
     ds = None
     ds_client = None
-    if args.retrieval:
-        if cfg.frontend:
-            raise SystemExit("--retrieval expects a token-input arch")
-        corpus = rng.integers(0, cfg.vocab_size, size=(8, 64))
-        pyr = PyramidConfig(metric="l2", num_shards=4, meta_size=32,
-                            sample_size=400, branching_factor=2,
-                            max_degree=12, max_degree_upper=6,
-                            ef_construction=40, ef_search=60)
-        ds = build_datastore(params, cfg, [corpus], pyr)
-        ds_client = open_datastore_client(
-            ds, quantize=args.quantize, rerank_factor=args.rerank_factor)
-        stats = ds_client.stats()
-        print(f"[serve] datastore ready: {ds.values.shape[0]} entries, "
-              f"served by {len(stats['executors'])} executors "
-              f"(quantized={stats['quantized']}, "
-              f"arena vector bytes={stats['arena_vector_bytes']})")
+    # the datastore client is a context manager owning its engine: the
+    # with-block guarantees the executor threads come down on any exit
+    # path (an abandoned engine can abort the interpreter mid-XLA-call)
+    with contextlib.ExitStack() as stack:
+        if args.retrieval:
+            if cfg.frontend:
+                raise SystemExit("--retrieval expects a token-input arch")
+            corpus = rng.integers(0, cfg.vocab_size, size=(8, 64))
+            pyr = PyramidConfig(metric="l2", num_shards=4, meta_size=32,
+                                sample_size=400, branching_factor=2,
+                                max_degree=12, max_degree_upper=6,
+                                ef_construction=40, ef_search=60)
+            ds = build_datastore(params, cfg, [corpus], pyr)
+            ds_client = stack.enter_context(open_datastore_client(
+                ds, quantize=args.quantize,
+                rerank_factor=args.rerank_factor))
+            stats = ds_client.stats()
+            print(f"[serve] datastore ready: {ds.values.shape[0]} entries, "
+                  f"served by {len(stats['executors'])} executors "
+                  f"(quantized={stats['quantized']}, "
+                  f"arena vector bytes={stats['arena_vector_bytes']})")
 
-    # everything past this point runs under the datastore engine (when
-    # --retrieval): any failure must still shut its threads down, or the
-    # interpreter can abort at teardown mid-XLA-call
-    try:
         t0 = time.time()
         logits, cache = prefill_step(params, prompt, cfg=cfg)
         cache = grow_cache(cache, args.prompt_len + args.tokens,
                            window=cfg.sliding_window)
-        print(f"[serve] prefill {prompt.shape} in {time.time()-t0:.2f}s")
+        print(f"[serve] prefill {prompt.shape} in {time.time() - t0:.2f}s")
 
         tok = jnp.argmax(logits[:, -1:].astype(jnp.float32),
                          -1).astype(jnp.int32)
@@ -106,9 +108,6 @@ def main() -> None:
             tok = nxt[:, None]
             out_tokens.append(np.asarray(nxt))
         dt = time.time() - t0
-    finally:
-        if ds_client is not None:
-            ds_client.engine.shutdown()
     gen = np.stack(out_tokens, axis=1)
     print(f"[serve] decoded {args.tokens} tokens/seq in {dt:.2f}s "
           f"({args.batch*args.tokens/dt:.1f} tok/s)")

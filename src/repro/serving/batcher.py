@@ -43,6 +43,16 @@ class Completion:
     steps: int
 
 
+def scatter_slot(cache, pcache, slot: int):
+    """Scatter a batch=1 prefill cache into slot ``slot`` of a shared
+    decode cache (ring/@swa groups scatter identically — the slot dim
+    leads every cache leaf). Shared by :class:`ContinuousBatcher` and
+    the streaming engine (``repro.serving.stream``)."""
+    def put(full, one):
+        return full.at[:, slot].set(one[:, 0].astype(full.dtype))
+    return jax.tree.map(put, cache, pcache)
+
+
 class ContinuousBatcher:
     """Fixed-slot continuous batching over one model."""
 
@@ -92,10 +102,7 @@ class ContinuousBatcher:
                                     build_cache=True)
         pcache = grow_cache(pcache, self.max_seq,
                             window=self.cfg.sliding_window)
-        # scatter the single-sequence cache into slot `slot`
-        def put(full, one):
-            return full.at[:, slot].set(one[:, 0].astype(full.dtype))
-        self.cache = jax.tree.map(put, self.cache, pcache)
+        self.cache = scatter_slot(self.cache, pcache, slot)
         first = int(jnp.argmax(logits[0, -1]))
         self.active[slot] = req
         self.pos[slot] = len(req.prompt)

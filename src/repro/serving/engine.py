@@ -156,7 +156,8 @@ class Executor(threading.Thread):
                  arena: ShardArena, metric: str, ef: int,
                  result_bus: "queue.Queue", heartbeat: Dict[str, float],
                  batch_max: int = 32, warm_k: int = 10,
-                 fault_tick=None, redispatch=None, k_factor: int = 1):
+                 fault_tick=None, redispatch=None, k_factor: int = 1,
+                 linger_s: float = 0.0, net_delay_s: float = 0.0):
         super().__init__(name=name, daemon=True)
         self.topic = topic
         self.shard_id = shard_id
@@ -178,6 +179,23 @@ class Executor(threading.Thread):
         self.k_factor = k_factor
         self.fault_tick = fault_tick   # engine hook: batch-drain boundary
         self.redispatch = redispatch   # engine hook: bookkept requeue
+        # Kafka linger.ms analogue: after the first drained item, wait
+        # up to this long for the rest of its burst before searching.
+        # Every search op costs the full padded batch_max regardless of
+        # fill, so a burst fragmented across two drains doubles the
+        # shard's compute — which happens routinely when the submitting
+        # thread is preempted mid-batch (single-core hosts, GIL). 0
+        # preserves drain-what-is-there semantics.
+        self.linger_s = linger_s
+        # remote-deployment emulation: in the paper's architecture every
+        # executor is a shard SERVER on another machine, so the client
+        # sees an RPC round-trip on top of the search. In this
+        # single-process reproduction that latency is emulated as a
+        # per-batch sleep before the partials post — it consumes no CPU
+        # (unlike cpu_share's throttle it neither scales with work nor
+        # shrinks the fetch budget), which is exactly what makes it
+        # hideable by a client that overlaps retrieval with decode.
+        self.net_delay_s = net_delay_s
         self.cpu_share = 1.0        # straggler injection: <1 adds sleep
         self.alive = True
         self.warmed = False         # past jit warmup (monitor grace gate)
@@ -247,7 +265,11 @@ class Executor(threading.Thread):
         """CPU-limit tool analogue: sleep off the lost share in small
         slices so a heavily throttled executor still heartbeats and
         still reacts to ``kill()`` promptly."""
-        end = time.monotonic() + busy_s * (1.0 / self.cpu_share - 1.0)
+        self._sleep(busy_s * (1.0 / self.cpu_share - 1.0))
+
+    def _sleep(self, duration_s: float) -> None:
+        """Heartbeating, kill-responsive sleep."""
+        end = time.monotonic() + duration_s
         while self.alive:
             now = time.monotonic()
             if now >= end:
@@ -278,11 +300,20 @@ class Executor(threading.Thread):
                 # until the straggler is extremely slow)
                 budget = max(1, int(self.batch_max * self.cpu_share ** 2))
                 batch = [first]
+                deadline = time.monotonic() + self.linger_s
                 while len(batch) < budget:
                     try:
                         batch.append(self.topic.get_nowait())
                     except queue.Empty:
-                        break
+                        # linger for the rest of the burst (releases the
+                        # GIL, letting the submitter finish enqueueing)
+                        wait = deadline - time.monotonic()
+                        if wait <= 0:
+                            break
+                        try:
+                            batch.append(self.topic.get(timeout=wait))
+                        except queue.Empty:
+                            break   # linger window expired, still empty
                 self._set_inflight(batch)
                 if self.fault_tick is not None:
                     self.fault_tick(self.name)   # drain boundary: a kill
@@ -303,6 +334,8 @@ class Executor(threading.Thread):
                 self.busy_since = 0.0
                 if self.cpu_share < 1.0:
                     self._throttle(time.monotonic() - t0)
+                if self.net_delay_s > 0.0:   # emulated RPC round-trip:
+                    self._sleep(self.net_delay_s)   # no CPU consumed
                 if not self.alive:      # killed during search/throttle:
                     return              # a dead machine returns nothing
                 for r, (ids_r, scores_r) in zip(batch, outs):
@@ -459,6 +492,7 @@ class ServingEngine:
     def __init__(self, index: PyramidIndex, *, replicas: int = 1,
                  ef: Optional[int] = None, auto_restart: bool = True,
                  executor_batch: int = 16, warm_k: int = 10,
+                 linger_s: float = 0.0, net_delay_s: float = 0.0,
                  pending_deadline_s: Optional[float] = 300.0,
                  quantize: bool = False, rerank_factor: int = 4,
                  hedge: bool = True,
@@ -478,6 +512,10 @@ class ServingEngine:
         self.auto_restart = auto_restart
         self.executor_batch = executor_batch
         self.warm_k = warm_k
+        # executor-side burst coalescing (Kafka linger.ms) and remote
+        # shard-server RPC emulation: see Executor
+        self.linger_s = linger_s
+        self.net_delay_s = net_delay_s
         # a pending query whose shard lost every live replica would leak
         # forever (its partials can never arrive); after this deadline it
         # is failed with QueryExpiredError. None disables expiry.
@@ -576,7 +614,9 @@ class ServingEngine:
                       batch_max=self.executor_batch, warm_k=self.warm_k,
                       fault_tick=self._fault_tick,
                       redispatch=self._redispatch_inflight,
-                      k_factor=self.rerank_factor)
+                      k_factor=self.rerank_factor,
+                      linger_s=self.linger_s,
+                      net_delay_s=self.net_delay_s)
         # seed the heartbeat BEFORE the thread runs: an executor that
         # dies or hangs before its first beat must look stale, not
         # fresh-forever (the old ``heartbeat.get(name, now)`` bug)

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.common.config import ArchConfig, PyramidConfig
-from repro.core.client import PyramidClient, gather
+from repro.core.client import PyramidClient, gather_arrays
 from repro.core.meta_index import PyramidIndex, build_pyramid_index
 from repro.core.distributed import search_single_host
 from repro.models.transformer import forward
@@ -61,42 +61,86 @@ def build_datastore(params, cfg: ArchConfig, token_batches,
 def hidden_states(params, cfg: ArchConfig, tokens) -> jnp.ndarray:
     """Final-norm hidden states [B, S, D] (the kNN-LM key convention).
 
-    Implemented by running ``forward`` with an identity LM head — the
-    "logits" of the modified model ARE the normed hidden states, so no
-    second code path through the trunk exists to drift out of sync.
+    Implemented by running ``forward`` with ``skip_head=True`` — the
+    "logits" of the head-skipped model ARE the normed hidden states, so
+    no second code path through the trunk exists to drift out of sync
+    (bit-identical to the old identity-LM-head formulation, and it works
+    for tied-embedding archs too).
     """
-    if cfg.tie_embeddings:
-        raise NotImplementedError("tied-embedding datastore keys")
-    d = cfg.d_model
-    p2 = {**params, "lm_head": jnp.eye(d, dtype=jnp.dtype(cfg.dtype))}
-    cfg2 = dataclasses.replace(cfg, vocab_size=d)
-    hid, _, _ = forward(p2, cfg2, tokens)
+    hid, _, _ = forward(params, cfg, tokens, skip_head=True)
     return hid
 
 
+class DatastoreClient(PyramidClient):
+    """A :class:`PyramidClient` that OWNS its engine: it is a context
+    manager whose ``with`` block (or explicit :meth:`shutdown`) tears
+    the engine's threads down. ``open_datastore_client`` used to hand
+    back a bare session and rely on every caller remembering
+    ``client.engine.shutdown()`` — a forgotten teardown leaked executor
+    threads for the life of the process (and could abort the interpreter
+    at exit mid-XLA-call)."""
+
+    def shutdown(self) -> None:
+        """Shut the owned engine down, then close the session."""
+        try:
+            self.engine.shutdown()
+        finally:
+            self.close()
+
+    def __exit__(self, *exc) -> None:
+        if not self._closed:   # idempotent: explicit shutdown() inside
+            self.shutdown()    # the with-block must not double-teardown
+
+
 def open_datastore_client(datastore: Datastore, *, replicas: int = 1,
-                          **engine_kw) -> PyramidClient:
+                          **engine_kw) -> DatastoreClient:
     """Serve ``datastore.index`` through the distributed engine; the
-    returned session feeds ``knn_probs(..., client=...)``. Callers own
-    teardown: ``client.engine.shutdown()``. Engine kwargs pass through —
-    ``quantize=True`` serves the datastore from the int8 arena (hidden-
-    state datastores are where the ~4x HBM saving bites first)."""
-    return PyramidClient.from_index(datastore.index, replicas=replicas,
-                                    **engine_kw)
+    returned session feeds ``knn_probs(..., client=...)`` and the
+    streaming decode engine (``repro.serving.stream``). The client owns
+    the engine — use it as a context manager::
+
+        with open_datastore_client(ds) as client:
+            knn_probs(ds, q, k=8, vocab_size=V, client=client)
+
+    (or call ``client.shutdown()`` explicitly). Engine kwargs pass
+    through — ``quantize=True`` serves the datastore from the int8
+    arena (hidden-state datastores are where the ~4x HBM saving bites
+    first)."""
+    return DatastoreClient.from_index(datastore.index, replicas=replicas,
+                                      **engine_kw)
 
 
-def _search_via_client(client: PyramidClient, queries: np.ndarray, k: int,
-                       branching_factor: Optional[int],
-                       timeout_s: float):
-    futures = client.search_batch(queries, k,
-                                  branching_factor=branching_factor)
-    ids = np.full((len(futures), k), -1, np.int64)
-    scores = np.full((len(futures), k), -np.inf, np.float32)
-    for i, r in enumerate(gather(futures, timeout_s)):
-        n = min(len(r.ids), k)
-        ids[i, :n] = r.ids[:n]
-        scores[i, :n] = r.scores[:n]
-    return ids, scores
+def knn_vocab_probs(values: np.ndarray, ids: np.ndarray,
+                    scores: np.ndarray, *, vocab_size: int,
+                    temperature: float = 10.0) -> np.ndarray:
+    """Batched (hit ids, scores) -> [B, V] kNN next-token distributions.
+
+    One vectorised vocab scatter for the whole batch (``np.add.at`` over
+    flat (row, token) pairs) instead of a Python loop per query — this
+    is the per-decode-step path of the streaming engine, where every
+    active slot resolves its lookup at once. Rows with no valid hit
+    (all ids ``-1``) fall back to the uniform distribution, matching the
+    old per-query behaviour.
+    """
+    ids = np.asarray(ids)
+    scores = np.asarray(scores, np.float32)
+    b, k = ids.shape
+    valid = ids >= 0
+    # scores are similarities (-L2^2 / ip); softmax with temperature,
+    # max-subtracted per row exactly as the old per-query loop did
+    s = np.where(valid, scores / temperature, -np.inf)
+    smax = s.max(axis=1, keepdims=True)
+    w = np.where(valid,
+                 np.exp(s - np.where(np.isfinite(smax), smax, 0.0)), 0.0)
+    norm = w.sum(axis=1, keepdims=True)
+    w = w / np.where(norm > 0, norm, 1.0)
+    probs = np.zeros((b, vocab_size), np.float32)
+    rows = np.repeat(np.arange(b), k)
+    toks = values[np.where(valid, ids, 0)].astype(np.int64)
+    np.add.at(probs, (rows, toks.reshape(-1)),
+              w.astype(np.float32).reshape(-1))
+    probs[norm[:, 0] == 0] = 1.0 / vocab_size
+    return probs
 
 
 def knn_probs(datastore: Datastore, queries: np.ndarray, *, k: int,
@@ -109,29 +153,20 @@ def knn_probs(datastore: Datastore, queries: np.ndarray, *, k: int,
     Returns [B, V] probabilities (host-side numpy; the search itself runs
     the jitted Pyramid path). With ``client`` the lookup goes through the
     distributed serving engine's futures surface instead of the
-    single-host path; a lookup missing ``timeout_s`` raises
-    ``TimeoutError``.
+    single-host path — one ``search_batch`` for the whole [B, D] batch,
+    bulk-resolved via :func:`repro.core.client.gather_arrays`; a lookup
+    missing ``timeout_s`` raises ``TimeoutError``.
     """
     if client is not None:
-        ids, scores = _search_via_client(client, queries, k,
-                                         branching_factor, timeout_s)
+        futures = client.search_batch(queries, k,
+                                      branching_factor=branching_factor)
+        ids, scores = gather_arrays(futures, k, timeout_s)
     else:
         ids, scores, _ = search_single_host(
             datastore.index, queries, k=k,
             branching_factor=branching_factor)
-    b = queries.shape[0]
-    probs = np.zeros((b, vocab_size), np.float32)
-    for i in range(b):
-        valid = ids[i] >= 0
-        if not valid.any():
-            probs[i] = 1.0 / vocab_size
-            continue
-        # scores are similarities (-L2^2 / ip); softmax with temperature
-        s = scores[i][valid] / temperature
-        s = np.exp(s - s.max())
-        s /= s.sum()
-        np.add.at(probs[i], datastore.values[ids[i][valid]], s)
-    return probs
+    return knn_vocab_probs(datastore.values, ids, scores,
+                           vocab_size=vocab_size, temperature=temperature)
 
 
 def interpolate(lm_logits: np.ndarray, knn_p: np.ndarray,

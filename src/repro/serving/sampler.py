@@ -1,7 +1,10 @@
 """Token samplers for the decode loop: greedy, temperature, top-k, top-p.
 
 All operate on [B, V] logits and are jit-able (static config, PRNG key
-threaded explicitly).
+threaded explicitly). :func:`sample_np` is the numpy twin for host-side
+sampling loops (the streaming engine samples on the host after
+interpolating retrieval probabilities — same masking semantics, numpy
+RNG instead of a jax key).
 """
 from __future__ import annotations
 
@@ -10,6 +13,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,3 +47,39 @@ def sample(logits: jnp.ndarray, key, cfg: SamplerConfig) -> jnp.ndarray:
         logits = jnp.where(logits < cutoff, -jnp.inf, logits)
 
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_np(logits: np.ndarray, rng: np.random.Generator,
+              cfg: SamplerConfig) -> np.ndarray:
+    """Numpy twin of :func:`sample` for host-side decode loops.
+
+    Identical temperature / top-k / top-p masking; the categorical draw
+    uses the Gumbel-max trick on ``rng`` (numpy) instead of a jax key,
+    so stochastic draws are reproducible per engine seed but not
+    bit-aligned with the jitted sampler. Greedy is exactly argmax in
+    both. logits [B, V] -> token ids [B] int64.
+    """
+    logits = np.asarray(logits, np.float32)
+    if cfg.greedy:
+        return np.argmax(logits, axis=-1)
+
+    logits = logits / max(cfg.temperature, 1e-6)
+
+    if cfg.top_k > 0 and cfg.top_k < logits.shape[-1]:
+        kth = np.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
+        logits = np.where(logits < kth, -np.inf, logits)
+
+    if cfg.top_p < 1.0:
+        sorted_logits = np.sort(logits, axis=-1)[..., ::-1]
+        x = np.exp(sorted_logits - sorted_logits[..., :1])
+        probs = x / x.sum(-1, keepdims=True)
+        cum = np.cumsum(probs, axis=-1)
+        # smallest set with cumulative mass >= top_p (always keep best)
+        cutoff_idx = np.sum(cum < cfg.top_p, axis=-1, keepdims=True)
+        cutoff = np.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = np.where(logits < cutoff, -np.inf, logits)
+
+    gumbel = -np.log(-np.log(
+        rng.uniform(low=np.finfo(np.float32).tiny, size=logits.shape)))
+    masked = np.where(np.isfinite(logits), logits + gumbel, -np.inf)
+    return np.argmax(masked, axis=-1)

@@ -1,0 +1,544 @@
+"""Streaming retrieval-decode engine: prefill / insert / generate_step
+serving over the Pyramid search engine (JetStream-style).
+
+This is the ROADMAP's "millions of users" workload made concrete: a
+continuous-batching LM decode loop in which EVERY decode step is a
+batched similarity query — kNN-LM (Khandelwal et al., the paper's
+citation [10]) over a Pyramid-sharded datastore of (hidden state ->
+next token) memories. The engine composes five PRs of machinery rather
+than re-implementing any of it:
+
+  * lookups go through :class:`~repro.core.client.PyramidClient`
+    futures against a :class:`~repro.serving.engine.ServingEngine`
+    (int8 ``QuantizedShardArena`` when the datastore client is opened
+    with ``quantize=True``), so hedging, supervised recovery, and the
+    exact-rerank path all run under sustained decode traffic;
+  * slot scheduling generalises :class:`~repro.serving.batcher.
+    ContinuousBatcher` (whose cache-scatter helper it shares);
+  * sampling reuses :mod:`repro.serving.sampler` (numpy twin).
+
+API (explicit, JetStream-shaped)::
+
+    with StreamEngine(params, cfg, datastore=ds, num_slots=8,
+                      max_seq=64) as eng:
+        sess = eng.prefill(Request(0, prompt, max_new_tokens=16))
+        eng.insert(sess)                  # queued; admitted into a slot
+        while ...:
+            emitted = eng.generate_step() # [(request_id, token), ...]
+        done = eng.done                   # Completion records
+
+Retrieval/decode overlap (``overlap=True``, the default) is
+double-buffered across two slot *groups*: while group A's decode step
+runs on the device, group B's ``SearchFuture``s resolve inside the
+search engine's executor threads, and vice versa — a group's lookups
+have one full counter-group turn to complete before its sampler needs
+them. Per-session semantics are EXACT kNN-LM either way: a session
+lives in one group, and its own timeline is always
+``forward -> retrieve -> interpolate -> sample``; ``overlap=False``
+(the serialized baseline the benchmark compares against) awaits each
+step's futures immediately and produces bit-identical tokens, just
+without hiding the retrieval latency.
+
+Backpressure: admission is bounded (``max_queue``; :class:`
+BackpressureError` on overflow) and decode can never run ahead of the
+search engine by more than one step per group — the sampler blocks on
+``gather_arrays`` (bounded by ``retrieval_timeout_s``) before the next
+dispatch, so a lagging engine throttles token emission instead of
+accumulating unresolved futures.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.config import ArchConfig
+from repro.common.utils import nearest_rank
+from repro.core.client import PyramidClient, gather_arrays
+from repro.models.transformer import forward, grow_cache, make_cache
+from repro.serving.batcher import Completion, Request, scatter_slot
+from repro.serving.retrieval import (Datastore, interpolate,
+                                     knn_vocab_probs,
+                                     open_datastore_client)
+from repro.serving.sampler import SamplerConfig, sample_np
+
+import jax
+
+
+class BackpressureError(RuntimeError):
+    """``insert`` refused a session: the admission queue is full
+    (``max_queue``). Callers should back off and retry — completing
+    sessions free queue capacity every ``generate_step``."""
+
+
+# one jitted decode step per ArchConfig: every StreamEngine over the
+# same config shares the compile (jit re-specialises per batch width
+# automatically, so engines with different group sizes still share the
+# function). Keyed by id() with the config kept alive in the value so a
+# recycled id can never alias a different config.
+_DECODE_JIT: Dict[int, Tuple[ArchConfig, object]] = {}
+
+
+def _decode_fn(cfg: ArchConfig):
+    hit = _DECODE_JIT.get(id(cfg))
+    if hit is not None:
+        return hit[1]
+
+    def step(params, cache, tokens, pos):
+        # one trunk pass yields BOTH the kNN-LM query key (the normed
+        # hidden state, via skip_head) and the LM logits (head applied
+        # explicitly) — no second forward to drift out of sync
+        hid, _, new_cache = forward(params, cfg, tokens, cache=cache,
+                                    decode_pos=pos, skip_head=True)
+        h = hid[:, 0].astype(jnp.float32)
+        if cfg.tie_embeddings:
+            logits = h @ params["embedding"].astype(jnp.float32).T
+        else:
+            logits = h @ params["lm_head"].astype(jnp.float32)
+        return logits, h, new_cache
+
+    fn = jax.jit(step)
+    _DECODE_JIT[id(cfg)] = (cfg, fn)
+    return fn
+
+
+@dataclasses.dataclass
+class Session:
+    """One request's lifecycle through the engine:
+    ``prefilled -> queued -> active -> done``. Created by
+    :meth:`StreamEngine.prefill`, which stores the prompt's grown cache
+    plus the last prompt position's LM logits and hidden state (the
+    first token's interpolation inputs)."""
+    request: Request
+    lm_logits: Optional[np.ndarray] = None     # [V] last-prompt-pos
+    hidden: Optional[np.ndarray] = None        # [D] kNN query key
+    pcache: Optional[object] = None            # grown prefill cache
+    future: Optional[object] = None            # first-token SearchFuture
+    submitted_at: float = 0.0
+    tokens: List[int] = dataclasses.field(default_factory=list)
+    state: str = "prefilled"
+
+    @property
+    def request_id(self) -> int:
+        return self.request.request_id
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One dispatched decode step awaiting its sample phase."""
+    logits: np.ndarray            # [L, V] live-slot LM logits
+    slots: List[int]              # live slot index per row
+    futures: Optional[List]       # per-row SearchFutures (None: LM-only)
+    submitted_at: float
+
+
+class _SlotGroup:
+    """One of the engine's two decode microbatches (static shapes =>
+    one compiled decode step per group width)."""
+
+    def __init__(self, cfg: ArchConfig, slots: int, max_seq: int):
+        self.cache = make_cache(cfg, slots, max_seq)
+        self.pos = np.zeros(slots, np.int64)       # next write position
+        self.last = np.zeros(slots, np.int64)      # last sampled token
+        self.sessions: List[Optional[Session]] = [None] * slots
+        self.inflight: Optional[_Inflight] = None
+
+
+class StreamEngine:
+    """Continuous-batching retrieval-augmented decode over a Pyramid
+    datastore (or plain LM decode with ``datastore=None``).
+
+    Parameters
+    ----------
+    num_slots : total decode slots, split over two double-buffer groups
+        (rounded up to even). More slots = more concurrent sessions per
+        decode step.
+    datastore / client : a kNN-LM :class:`Datastore` and (optionally) an
+        already-open :class:`PyramidClient` session serving its index.
+        Without ``client`` the engine opens one itself (engine kwargs
+        pass through — ``quantize=True, rerank_factor=4`` serves the
+        int8 arena) and shuts it down on :meth:`close`.
+    knn_k / lam / knn_temperature / branching_factor : kNN-LM knobs —
+        neighbours per lookup, interpolation weight, kNN softmax
+        temperature, and the Pyramid routing fan-out.
+    overlap : double-buffer retrieval behind the counter-group's decode
+        step (default). ``False`` = serialized await-every-step baseline
+        (identical tokens, no latency hiding).
+    max_queue / retrieval_timeout_s : backpressure knobs — admission
+        bound (``insert`` raises :class:`BackpressureError` beyond it)
+        and the per-step bound on waiting for the search engine.
+    """
+
+    def __init__(self, params, cfg: ArchConfig, *, num_slots: int = 8,
+                 max_seq: int = 64,
+                 datastore: Optional[Datastore] = None,
+                 client: Optional[PyramidClient] = None,
+                 knn_k: int = 8, lam: float = 0.25,
+                 knn_temperature: float = 10.0,
+                 branching_factor: Optional[int] = None,
+                 sampler: SamplerConfig = SamplerConfig(greedy=True),
+                 seed: int = 0, overlap: bool = True,
+                 max_queue: int = 64, retrieval_timeout_s: float = 30.0,
+                 stats_window: int = 4096, **engine_kw):
+        if datastore is None and client is not None:
+            raise ValueError("client= needs the datastore= it serves")
+        self.params = params
+        self.cfg = cfg
+        self.max_seq = max_seq
+        self.datastore = datastore
+        self.knn_k = knn_k
+        self.lam = lam
+        self.knn_temperature = knn_temperature
+        self.branching_factor = branching_factor
+        self.sampler = sampler
+        self.overlap = overlap
+        self.max_queue = max_queue
+        self.retrieval_timeout_s = retrieval_timeout_s
+
+        self._owns_client = False
+        self._client = client
+        if datastore is not None and client is None:
+            self._client = open_datastore_client(datastore, **engine_kw)
+            self._owns_client = True
+        elif engine_kw:
+            raise ValueError(
+                f"engine kwargs {sorted(engine_kw)} only apply when the "
+                "engine opens its own datastore client")
+
+        self.slots_per_group = max(1, (num_slots + 1) // 2)
+        self.num_slots = 2 * self.slots_per_group
+        self.groups = [_SlotGroup(cfg, self.slots_per_group, max_seq)
+                       for _ in range(2)]
+        self._turn = 0
+        self._decode = _decode_fn(cfg)
+        self._rng = np.random.default_rng(seed)
+
+        self.queue: collections.deque = collections.deque()
+        self.done: List[Completion] = []
+        self._closed = False
+        self._t0: Optional[float] = None
+        self._steps = 0
+        self._tokens = 0
+        self._admitted = 0
+        self._rejected = 0
+        self._lookups = 0
+        self._knn_hits = 0
+        self._knn_tokens = 0
+        self._hedges = 0
+        self._ret_wait = collections.deque(maxlen=stats_window)
+        self._ret_lat = collections.deque(maxlen=stats_window)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @property
+    def client(self) -> Optional[PyramidClient]:
+        return self._client
+
+    def close(self) -> None:
+        """Tear down the engine; shuts down the datastore client's
+        serving engine iff this engine opened it."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._owns_client and self._client is not None:
+            self._client.shutdown()
+
+    def __enter__(self) -> "StreamEngine":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- prefill / insert --------------------------------------------------
+
+    def prefill(self, request: Request) -> Session:
+        """Run the prompt through the model (batch=1, un-jitted — prompt
+        lengths vary); returns a ``prefilled`` :class:`Session` holding
+        the grown cache and the first token's interpolation inputs. The
+        session is NOT serving yet — :meth:`insert` it."""
+        prompt = np.asarray(request.prompt)
+        if len(prompt) >= self.max_seq:
+            raise ValueError(
+                f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
+        toks = jnp.asarray(prompt[None, :], jnp.int32)
+        hid, _, pcache = forward(self.params, self.cfg, toks,
+                                 build_cache=True, skip_head=True)
+        pcache = grow_cache(pcache, self.max_seq,
+                            window=self.cfg.sliding_window)
+        h = hid[:, -1].astype(jnp.float32)
+        if self.cfg.tie_embeddings:     # same head application as the
+            logits = h @ self.params["embedding"].astype(jnp.float32).T
+        else:                           # jitted decode step
+            logits = h @ self.params["lm_head"].astype(jnp.float32)
+        return Session(request=request,
+                       lm_logits=np.asarray(logits[0]),
+                       hidden=np.asarray(h[0], np.float32),
+                       pcache=pcache)
+
+    def insert(self, session: Session) -> None:
+        """Queue a prefilled session for slot admission. Issues its
+        first-token kNN lookup immediately, so the retrieval overlaps
+        the queue wait. Raises :class:`BackpressureError` when the
+        admission queue is at ``max_queue``."""
+        if session.state != "prefilled":
+            raise ValueError(f"session {session.request_id} is "
+                             f"{session.state}, expected 'prefilled'")
+        if len(self.queue) >= self.max_queue:
+            self._rejected += 1
+            raise BackpressureError(
+                f"admission queue full ({self.max_queue}); retry after "
+                "generate_step frees capacity")
+        if self._client is not None:
+            session.future = self._client.search(
+                session.hidden, self.knn_k,
+                branching_factor=self.branching_factor)
+            session.submitted_at = time.monotonic()
+        session.state = "queued"
+        self.queue.append(session)
+
+    def submit(self, request: Request) -> Session:
+        """Convenience: ``insert(prefill(request))``."""
+        sess = self.prefill(request)
+        self.insert(sess)
+        return sess
+
+    # -- decode loop -------------------------------------------------------
+
+    def generate_step(self) -> List[Tuple[int, int]]:
+        """One scheduler turn: finish the turn group's previous decode
+        step (resolve retrieval, interpolate, sample, evict), admit
+        queued sessions into freed slots, dispatch the group's next
+        decode step and its batched kNN lookup. Returns the
+        ``(request_id, token)`` pairs emitted this turn.
+
+        With ``overlap=True`` the dispatched step is left in flight —
+        its futures resolve while the OTHER group takes its turn; with
+        ``overlap=False`` it is finished (awaited) before returning.
+        """
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        g = self.groups[self._turn]
+        self._turn = 1 - self._turn
+        emitted: List[Tuple[int, int]] = []
+        self._finish(g, emitted)
+        self._admit(g, emitted)
+        self._dispatch(g)
+        if not self.overlap:
+            self._finish(g, emitted)
+        return emitted
+
+    def has_work(self) -> bool:
+        return bool(self.queue
+                    or any(s is not None for grp in self.groups
+                           for s in grp.sessions)
+                    or any(grp.inflight is not None
+                           for grp in self.groups))
+
+    def run_until_drained(self, max_steps: int = 100_000
+                          ) -> List[Completion]:
+        steps = 0
+        while self.has_work() and steps < max_steps:
+            self.generate_step()
+            steps += 1
+        return self.done
+
+    # -- internals ---------------------------------------------------------
+
+    def _knn_logprobs(self, lm_logits: np.ndarray, ids: np.ndarray,
+                      scores: np.ndarray) -> np.ndarray:
+        knn = knn_vocab_probs(self.datastore.values, ids, scores,
+                              vocab_size=self.cfg.vocab_size,
+                              temperature=self.knn_temperature)
+        return interpolate(lm_logits, knn, lam=self.lam)
+
+    def _count_hits(self, ids: np.ndarray, toks: np.ndarray) -> None:
+        """Per-token kNN hit: the sampled token appeared among the
+        retrieved memories' values (the benchmark's recall-equivalent)."""
+        vals = np.where(ids >= 0, self.datastore.values[
+            np.where(ids >= 0, ids, 0)], -1)
+        self._knn_hits += int((vals == toks[:, None]).any(axis=1).sum())
+        self._knn_tokens += len(toks)
+
+    def _finish(self, g: _SlotGroup, emitted: List) -> None:
+        inf = g.inflight
+        if inf is None:
+            return
+        g.inflight = None
+        if inf.futures is not None:
+            t0 = time.monotonic()
+            ids, scores = gather_arrays(inf.futures, self.knn_k,
+                                        self.retrieval_timeout_s)
+            now = time.monotonic()
+            self._ret_wait.append(now - t0)
+            self._ret_lat.append(now - inf.submitted_at)
+            self._lookups += len(inf.futures)
+            self._hedges += sum(f.hedges for f in inf.futures)
+            logp = self._knn_logprobs(inf.logits, ids, scores)
+        else:
+            logp = inf.logits
+        toks = sample_np(logp, self._rng, self.sampler)
+        if inf.futures is not None:
+            self._count_hits(ids, toks)
+        for row, slot in enumerate(inf.slots):
+            sess = g.sessions[slot]
+            tok = int(toks[row])
+            sess.tokens.append(tok)
+            g.pos[slot] += 1
+            g.last[slot] = tok
+            emitted.append((sess.request_id, tok))
+            self._tokens += 1
+            if self._finished(sess, int(g.pos[slot])):
+                self._complete(sess)
+                g.sessions[slot] = None
+
+    def _finished(self, sess: Session, pos: int) -> bool:
+        req = sess.request
+        hit_eos = (req.eos_id is not None and sess.tokens
+                   and sess.tokens[-1] == req.eos_id)
+        return (len(sess.tokens) >= req.max_new_tokens or hit_eos
+                or pos >= self.max_seq - 1)
+
+    def _complete(self, sess: Session) -> None:
+        sess.state = "done"
+        self.done.append(Completion(
+            sess.request_id, sess.tokens, len(sess.request.prompt),
+            len(sess.tokens)))
+
+    def _admit(self, g: _SlotGroup, emitted: List) -> None:
+        """Fill free slots from the admission queue. A session's first
+        token is sampled HERE (prefill logits x its insert-time lookup,
+        which has been resolving since ``insert``), so the slot enters
+        the next dispatch with a valid last token — no garbage decode
+        step ever touches the cache (ring or recurrent state).
+
+        With ``overlap=True`` admission is BALANCED across the two slot
+        groups (this group only admits up to its fair share of the
+        queue): an empty peer group leaves nothing to hide retrieval
+        behind. Serialized mode packs one group densely instead — each
+        group's decode op is padded to full width regardless of
+        occupancy, so splitting a small load across groups would just
+        double the op count for nothing."""
+        budget = self.slots_per_group
+        if self.overlap:
+            peer = self.groups[1] if g is self.groups[0] else self.groups[0]
+            peer_active = sum(s is not None for s in peer.sessions)
+            this_active = sum(s is not None for s in g.sessions)
+            fair = peer_active + max(1, (len(self.queue) + 1) // 2)
+            budget = max(0, fair - this_active)
+        for slot in range(self.slots_per_group):
+            if budget <= 0:
+                break
+            if g.sessions[slot] is not None:
+                continue
+            while self.queue:
+                sess = self.queue.popleft()
+                tok = self._first_token(sess)
+                emitted.append((sess.request_id, tok))
+                self._tokens += 1
+                pos = len(sess.request.prompt)
+                if self._finished(sess, pos):
+                    self._complete(sess)   # done at token 1: the slot
+                    continue               # stays free for the next in line
+                g.cache = scatter_slot(g.cache, sess.pcache, slot)
+                sess.pcache = None         # freed: the slot owns it now
+                sess.state = "active"
+                g.sessions[slot] = sess
+                g.pos[slot] = pos
+                g.last[slot] = tok
+                self._admitted += 1
+                budget -= 1
+                break
+
+    def _first_token(self, sess: Session) -> int:
+        ids = None
+        if sess.future is not None:
+            t0 = time.monotonic()
+            ids, scores = gather_arrays([sess.future], self.knn_k,
+                                        self.retrieval_timeout_s)
+            now = time.monotonic()
+            self._ret_wait.append(now - t0)
+            # no _ret_lat sample: this lookup was issued at insert() and
+            # may have sat behind the admission queue for many steps —
+            # that residency is queueing, not retrieval latency, and
+            # would swamp the per-step p99
+            self._lookups += 1
+            self._hedges += sess.future.hedges
+            sess.future = None
+            logp = self._knn_logprobs(sess.lm_logits[None], ids, scores)
+        else:
+            logp = sess.lm_logits[None]
+        tok = sample_np(logp, self._rng, self.sampler)
+        if ids is not None:
+            self._count_hits(ids, np.asarray(tok))
+        tok = int(tok[0])
+        sess.tokens.append(tok)
+        return tok
+
+    def _dispatch(self, g: _SlotGroup) -> None:
+        live = [s for s in range(self.slots_per_group)
+                if g.sessions[s] is not None]
+        if not live:
+            return
+        tokens = jnp.asarray(g.last[:, None], jnp.int32)
+        pos = jnp.asarray(g.pos, jnp.int32)
+        logits_d, hidden_d, g.cache = self._decode(
+            self.params, g.cache, tokens, pos)
+        # blocking on the transfer IS the overlap window for the other
+        # group: while this group's decode finishes on device, the
+        # counter-group's lookups resolve in the engine's threads
+        logits = np.asarray(logits_d)[live]
+        hidden = np.asarray(hidden_d, np.float32)[live]
+        futures = None
+        submitted = time.monotonic()
+        if self._client is not None:
+            futures = self._client.search_batch(
+                hidden, self.knn_k,
+                branching_factor=self.branching_factor)
+        g.inflight = _Inflight(logits, live, futures, submitted)
+        self._steps += 1
+
+    # -- observability -----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Engine snapshot: scheduler state, throughput, and per-step
+        retrieval latency percentiles (``latency`` = submit->resolved,
+        the engine-side service time; ``wait`` = time the sampler
+        actually blocked, i.e. the NON-overlapped remainder)."""
+        lat = sorted(self._ret_lat)
+        wait = sorted(self._ret_wait)
+        active = sum(s is not None for grp in self.groups
+                     for s in grp.sessions)
+        dt = (time.monotonic() - self._t0) if self._t0 else float("nan")
+
+        def pct(xs, q):
+            return nearest_rank(xs, q) if xs else float("nan")
+
+        return {
+            "num_slots": self.num_slots,
+            "slots_per_group": self.slots_per_group,
+            "overlap": self.overlap,
+            "steps": self._steps,
+            "tokens_emitted": self._tokens,
+            "tokens_per_s": (self._tokens / dt if dt and dt > 0
+                             else float("nan")),
+            "sessions": {"queued": len(self.queue), "active": active,
+                         "admitted": self._admitted,
+                         "completed": len(self.done),
+                         "rejected": self._rejected},
+            "retrieval": {
+                "enabled": self._client is not None,
+                "knn_k": self.knn_k, "lam": self.lam,
+                "lookups": self._lookups,
+                "hedges": self._hedges,
+                "latency_p50_s": pct(lat, 50),
+                "latency_p99_s": pct(lat, 99),
+                "wait_p50_s": pct(wait, 50),
+                "wait_p99_s": pct(wait, 99),
+                "knn_hit_rate": (self._knn_hits / self._knn_tokens
+                                 if self._knn_tokens else float("nan")),
+            },
+        }

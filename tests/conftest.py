@@ -1,0 +1,17 @@
+"""Suite-wide fixtures.
+
+The full suite compiles hundreds of XLA programs in one process; on the
+CPU backend the accumulated executables eventually segfault a later
+compile (observed deterministically in test_system once the suite grew
+past ~220 tests). Dropping the compilation caches between modules keeps
+peak XLA state at single-module level — each module mostly compiles its
+own shapes anyway, so the cost is seconds, not a recompile storm.
+"""
+import jax
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_per_module():
+    yield
+    jax.clear_caches()

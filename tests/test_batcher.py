@@ -82,3 +82,59 @@ def test_batcher_eos_stops_early(model):
     assert len(done) == 1
     assert done[0].tokens[0] == ref[0]
     assert len(done[0].tokens) == 1
+
+
+def test_batcher_greedy_deterministic_across_num_slots(model):
+    """Greedy tokens are a property of the request, not the schedule:
+    any slot count yields identical per-request outputs."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+               for l in (4, 8, 6, 10, 5)]
+    runs = []
+    for num_slots in (1, 2, 4):
+        b = ContinuousBatcher(params, cfg, num_slots=num_slots, max_seq=32)
+        for i, p in enumerate(prompts):
+            b.submit(Request(i, p, max_new_tokens=5))
+        done = b.run_until_drained()
+        runs.append({c.request_id: c.tokens for c in done})
+        assert sorted(runs[-1]) == list(range(len(prompts)))
+    assert runs[0] == runs[1] == runs[2]
+
+
+def test_batcher_mixed_lengths_recycles_slots(model):
+    """Mixed prompt and output lengths: short sequences free their slot
+    early and the freed slot serves later requests (strictly more
+    requests complete than slots exist), all matching the sequential
+    reference."""
+    cfg, params = model
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, size=l).astype(np.int32)
+               for l in (3, 11, 5, 9, 4, 7)]
+    n_new = [2, 6, 3, 5, 2, 4]
+    b = ContinuousBatcher(params, cfg, num_slots=2, max_seq=32)
+    for i, p in enumerate(prompts):
+        b.submit(Request(i, p, max_new_tokens=n_new[i]))
+    done = b.run_until_drained()
+    assert sorted(c.request_id for c in done) == list(range(len(prompts)))
+    by_id = {c.request_id: c for c in done}
+    for i, p in enumerate(prompts):
+        assert len(by_id[i].tokens) == n_new[i]
+        ref = _sequential_greedy(params, cfg, p, n_new[i], 32)
+        assert by_id[i].tokens == ref, (i, by_id[i].tokens, ref)
+
+
+def test_batcher_slot_reuse_after_eviction_is_clean(model):
+    """A slot that served a long sequence must not leak cache state into
+    the next request admitted after its eviction: the recycled slot's
+    output equals a fresh single-slot run."""
+    cfg, params = model
+    rng = np.random.default_rng(6)
+    first = rng.integers(0, cfg.vocab_size, size=10).astype(np.int32)
+    second = rng.integers(0, cfg.vocab_size, size=4).astype(np.int32)
+    b = ContinuousBatcher(params, cfg, num_slots=1, max_seq=32)
+    b.submit(Request(0, first, max_new_tokens=6))
+    b.submit(Request(1, second, max_new_tokens=6))   # waits for slot 0
+    done = b.run_until_drained()
+    by_id = {c.request_id: c for c in done}
+    assert by_id[1].tokens == _sequential_greedy(params, cfg, second, 6, 32)

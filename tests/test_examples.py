@@ -1,0 +1,29 @@
+"""Slow-lane smoke tests: the examples must actually run end-to-end.
+
+`examples/retrieval_decode.py` is the full kNN-LM serving flow —
+datastore build, context-managed client, streaming engine — so running
+it is the cheapest whole-system integration check we have.
+"""
+import pathlib
+import runpy
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+EXAMPLES = pathlib.Path(__file__).resolve().parent.parent / "examples"
+
+
+def test_retrieval_decode_example_runs(capsys):
+    runpy.run_path(str(EXAMPLES / "retrieval_decode.py"),
+                   run_name="__main__")
+    out = capsys.readouterr().out
+    assert "streaming decode" in out
+    assert "sessions" in out
+
+
+def test_continuous_batching_example_runs(capsys):
+    runpy.run_path(str(EXAMPLES / "continuous_batching.py"),
+                   run_name="__main__")
+    out = capsys.readouterr().out
+    assert "10 requests" in out
