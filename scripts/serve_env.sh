@@ -1,0 +1,27 @@
+# Host-side tuning for serving launches. Source before any python -m
+# repro.launch.* entry point:
+#
+#   source scripts/serve_env.sh
+#   PYTHONPATH=src python -m repro.launch.serve --retrieval ...
+#
+# Two independent knobs (see API.md "Serving host environment" for the
+# measured effect on this repo's quick benchmarks):
+#
+# 1. tcmalloc. CPython + XLA host callbacks allocate hot; tcmalloc's
+#    thread-cached freelists cut malloc contention under the engine's
+#    executor threads. Guarded on existence — containers without
+#    gperftools keep glibc malloc and everything still works.
+TCMALLOC_SO=/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4
+if [ -e "$TCMALLOC_SO" ]; then
+    export LD_PRELOAD="$TCMALLOC_SO${LD_PRELOAD:+:$LD_PRELOAD}"
+    # silence per-allocation reports for the big arena/datastore buffers
+    export TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD=60000000000
+fi
+
+# 2. XLA host-platform tuning. One host device: the engine parallelises
+#    across executor *threads* over a shared arena, so asking XLA to
+#    split the host into virtual devices only fragments its thread pool.
+export XLA_FLAGS="--xla_force_host_platform_device_count=1${XLA_FLAGS:+ $XLA_FLAGS}"
+
+# keep serving logs readable: drop libtpu/absl INFO+WARNING chatter
+export TF_CPP_MIN_LOG_LEVEL=${TF_CPP_MIN_LOG_LEVEL:-4}

@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import hnsw as H
 from repro.core.router import route_queries
+from repro.kernels.beam_search import beam_search
 from repro.kernels.merge_topk import merge_topk
 
 
@@ -265,7 +266,8 @@ def _stack_host(index, quantize=None) -> Dict[str, np.ndarray]:
 
 def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
                  *, metric: str, k: int, ef: int, capacity: int,
-                 max_iters: int = 400, shard_axis: str = "vmap"):
+                 max_iters: int = 400, shard_axis: str = "kernel",
+                 use_kernel: bool = True):
     """Capacity-bounded beam search mapped over the shard axis.
 
     Each shard drains its <= ``capacity`` assigned queries from ``mask``
@@ -276,22 +278,69 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
       arena: the shards to search — all of them (local slice inside SPMD).
       mask: [B, w_arena] bool routing mask aligned with ``arena``.
       queries: [B, d] preprocessed queries.
-      shard_axis: "vmap" batches the shard axis (right on TPU, where the
-        graph gathers stay one MXU/VPU-friendly program); "map" lowers it
-        to a sequential ``lax.map`` — XLA:CPU specialises gathers from a
-        2-D table far better than batched gathers from the stacked 3-D
-        table (~2x on the CPU reference path), and the per-shard loop is
-        sequential on one core anyway.
+      shard_axis: "kernel" (default) runs every (shard, slot) pair
+        through ONE fused beam-walk op (``repro.kernels.beam_search``) —
+        the Pallas kernel on TPU, the flattened batched oracle elsewhere.
+        It retires the old backend split ("map" on CPU, "vmap" on TPU)
+        behind one strategy: all w * C rows walk in one loop whose trip
+        count is the global max. "vmap" / "map" keep the per-query
+        ``while_loop`` batched / sequentially mapped over the shard axis
+        (the roofline's measured baselines; "map"'s per-shard early
+        termination keeps it the fastest multi-shard path on CPU — see
+        API.md "Fused beam search" for the honest numbers — but it is w
+        sequential dispatches that cannot feed the Pallas kernel).
+      use_kernel: allow the Pallas kernel ("kernel" strategy on TPU).
+        Must be False inside ``shard_map`` — same rule as ``merge_topk``.
 
     Returns (qidx [w, C] i32, ids [w, C, k] i32, scores [w, C, k] f32).
 
     Works identically over a float :class:`ShardArena` and a
-    :class:`QuantizedShardArena` — the map runs over the arena *pytree*
-    (every leaf is shard-leading), and ``as_graph()`` rebuilds the
-    matching per-shard graph type, whose ``score_nodes`` carries the
-    representation-specific distance.
+    :class:`QuantizedShardArena` — every strategy maps the arena
+    *pytree* (every leaf is shard-leading); the quantized arena routes
+    its frozen grid into the dequantize-scoring variant of the walk, so
+    the representation-specific distance is preserved.
     """
     b = queries.shape[0]
+
+    if shard_axis == "kernel":
+        # drain each shard's queue, then walk ALL (shard, slot) rows in
+        # one fused op — same math as vmap(search_one) per slot
+        qidx = jax.vmap(
+            lambda col: jnp.nonzero(col, size=capacity, fill_value=b)[0])(
+                mask.T)                                      # [w, C]
+        slot_valid = qidx < b
+        qs = queries[jnp.clip(qidx, 0, b - 1)]               # [w, C, d]
+        entries = jax.vmap(lambda sl, qrow: jax.vmap(
+            lambda qv: H._greedy_descend(
+                sl.as_graph(), qv, metric, max_steps=64))(qrow))(
+                    arena, qs)                               # [w, C]
+        scale = getattr(arena, "scale", None)
+        efb = max(ef, k)
+        scores, nodes = beam_search(
+            arena.data, arena.bottom, qs, entries, metric=metric,
+            ef=efb, max_iters=max_iters,
+            scale=None if scale is None else scale[0],
+            zero=None if scale is None else arena.zero[0],
+            use_kernel=use_kernel)
+        kk = min(k, scores.shape[-1])
+        top_scores, idx = jax.lax.top_k(scores, kk)
+        top_nodes = jnp.take_along_axis(nodes, idx, axis=2)
+        ids_out = jax.vmap(lambda ids_s, tn: jnp.where(
+            tn >= 0, ids_s[jnp.clip(tn, 0)], -1))(arena.ids, top_nodes)
+        if kk < k:  # shards smaller than k: pad
+            w = qidx.shape[0]
+            pad = k - kk
+            ids_out = jnp.concatenate(
+                [ids_out, jnp.full((w, capacity, pad), -1, jnp.int32)],
+                axis=2)
+            top_scores = jnp.concatenate(
+                [top_scores,
+                 jnp.full((w, capacity, pad), -jnp.inf, jnp.float32)],
+                axis=2)
+        ids_out = jnp.where(slot_valid[:, :, None], ids_out, -1)
+        scores_out = jnp.where(
+            slot_valid[:, :, None], top_scores, -jnp.inf)
+        return qidx.astype(jnp.int32), ids_out, scores_out
 
     def one_shard(arena_slice, shard_mask):
         g = arena_slice.as_graph()
@@ -336,7 +385,8 @@ def _search_scatter_merge(arena: ShardArena, mask: jnp.ndarray,
     b = queries.shape[0]
     qidx, ids, scores = shard_search(
         arena, mask, queries, metric=metric, k=k, ef=ef,
-        capacity=capacity, max_iters=max_iters, shard_axis=shard_axis)
+        capacity=capacity, max_iters=max_iters, shard_axis=shard_axis,
+        use_kernel=use_kernel)
     flat_s, flat_i = scatter_partials(qidx, ids, scores, b)
     top_s, top_i = merge_topk(flat_s, flat_i, k=k, use_kernel=use_kernel)
     return top_i, top_s
@@ -405,15 +455,17 @@ def arena_search(arena: ShardArena, meta: H.HNSWArrays,
       naive: search every shard (the HNSW-naive baseline of Sec. III).
       mask: optional precomputed [B, w] routing mask; skips the routing
         stage (the reference path uses this to guarantee zero drops).
-      shard_axis: "vmap" | "map" shard-axis strategy (see
-        :func:`shard_search`); default "map" on CPU, "vmap" elsewhere.
+      shard_axis: "kernel" | "vmap" | "map" shard-axis strategy (see
+        :func:`shard_search`); defaults to "kernel" — ONE strategy on
+        every backend (the op layer picks Pallas on TPU, the fused
+        oracle elsewhere), retiring the old CPU "map" special case.
 
     Returns (ids [B, k] i32, scores [B, k] f32, mask [B, w] bool).
     """
     b = queries.shape[0]
     w = arena.num_shards
     if shard_axis is None:
-        shard_axis = "map" if jax.default_backend() == "cpu" else "vmap"
+        shard_axis = "kernel"
     if capacity is None:
         if naive:
             capacity = b

@@ -287,7 +287,8 @@ def make_pyramid_search_fn(mesh: Mesh, cfg: PyramidConfig, *, k: int,
             mask, my * w_local, w_local, axis=1)
         qidx, ids, scores = shard_search(
             arena, local_mask, queries, metric=metric, k=k_inner,
-            ef=max(ef, k_inner), capacity=capacity, max_iters=max_iters)
+            ef=max(ef, k_inner), capacity=capacity, max_iters=max_iters,
+            shard_axis="kernel", use_kernel=False)
 
         # coordinator merge: gather partials from all shards, then the
         # same scatter + dedup merge as the fused single-host pipeline

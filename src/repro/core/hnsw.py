@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import metrics as M
+from repro.kernels.beam_search import beam_search
 
 NEG_INF = np.float32(-np.inf)
 
@@ -484,9 +485,51 @@ def search_one(g: HNSWArrays, q: jnp.ndarray, *, metric: str, k: int,
     return ext, top_scores
 
 
-@partial(jax.jit, static_argnames=("metric", "k", "ef", "max_iters"))
+def search_batch(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
+                 k: int, ef: int, max_iters: int = 400,
+                 max_steps: int = 64, use_kernel: bool = True):
+    """Batched search through the fused beam-walk op
+    (``repro.kernels.beam_search``): greedy upper-layer descent per query
+    (cheap, stays in XLA), then ONE fused bottom-layer walk for the whole
+    batch — the Pallas kernel on TPU, the batched jnp oracle elsewhere.
+
+    Bit-identical to ``vmap(search_one)``: the op freezes finished rows
+    so the shared loop matches the per-query ``while_loop``, and its
+    scoring lowers to the same per-row dots as ``score_nodes``. Trace-
+    time only (call under jit). Returns (ids [B, k], scores [B, k])
+    best-first with (-1, -inf) padding.
+    """
+    ef = max(ef, k)
+    entries = jax.vmap(
+        lambda qv: _greedy_descend(g, qv, metric, max_steps=max_steps))(
+            queries)
+    scale = getattr(g, "scale", None)
+    zero = getattr(g, "zero", None)
+    scores, nodes = beam_search(
+        g.data[None], g.bottom[None], queries[None], entries[None],
+        metric=metric, ef=ef, max_iters=max_iters, scale=scale, zero=zero,
+        use_kernel=use_kernel)
+    scores, nodes = scores[0], nodes[0]                # [B, ef']
+    kk = min(k, scores.shape[1])
+    top_scores, idx = jax.lax.top_k(scores, kk)
+    top_nodes = jnp.take_along_axis(nodes, idx, axis=1)
+    ext = jnp.where(top_nodes >= 0, g.ids[jnp.clip(top_nodes, 0)], -1)
+    if kk < k:  # graph smaller than k: pad
+        b = queries.shape[0]
+        pad = k - kk
+        ext = jnp.concatenate(
+            [ext, jnp.full((b, pad), -1, jnp.int32)], axis=1)
+        top_scores = jnp.concatenate(
+            [top_scores, jnp.full((b, pad), -jnp.inf, jnp.float32)],
+            axis=1)
+    return ext, top_scores
+
+
+@partial(jax.jit, static_argnames=("metric", "k", "ef", "max_iters",
+                                   "impl", "use_kernel"))
 def hnsw_search(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
-                k: int, ef: int = 100, max_iters: int = 400):
+                k: int, ef: int = 100, max_iters: int = 400,
+                impl: str = "fused", use_kernel: bool = True):
     """Batched HNSW search (Alg. 1).
 
     Args:
@@ -495,10 +538,18 @@ def hnsw_search(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
       k: neighbours to return.
       ef: bottom-layer search factor (l in the paper).
       max_iters: hard bound on beam expansions (while_loop trip bound).
+      impl: "fused" (default) runs the whole batch through the fused
+        beam-walk op; "loop" keeps the per-query vmapped ``while_loop``
+        (the roofline's baseline). Results are identical.
+      use_kernel: allow the Pallas kernel on TPU ("fused" only). Must be
+        False when traced inside ``shard_map`` (e.g. the SPMD router).
 
     Returns:
       (ids [B, k] int32 external ids (-1 pad), scores [B, k] f32) best-first.
     """
+    if impl == "fused":
+        return search_batch(g, queries, metric=metric, k=k, ef=ef,
+                            max_iters=max_iters, use_kernel=use_kernel)
     return jax.vmap(lambda q: search_one(
         g, q, metric=metric, k=k, ef=ef, max_iters=max_iters))(queries)
 

@@ -1,0 +1,246 @@
+"""Pallas TPU kernel: fused bottom-layer HNSW beam walk.
+
+One grid step owns a (graph, query-block) pair and runs the ENTIRE beam
+walk without leaving the core: the shard's vector tile and adjacency
+live in VMEM for the whole walk, beam scores/ids and the expansion
+frontier ride the ``lax.while_loop`` carry (registers/VMEM), and the
+per-query visited set is a packed int32 bitmask in VMEM scratch —
+nothing round-trips through HBM between expansions, which is the whole
+point versus the XLA ``while_loop``-of-gathers baseline.
+
+Per iteration, entirely in-core:
+  * masked-argmax selection of the best unexpanded beam entry
+    (``merge_topk``'s rounds idiom, not ``lax.top_k``);
+  * neighbour-row gather as a one-hot matmul against the VMEM tile
+    (MXU-friendly; integer adjacency values are exact in f32 below 2^24);
+  * visited-bitmask test (arithmetic shift + mask on packed words) and a
+    bitwise-OR update that is safe under duplicate neighbour slots;
+  * ``score_nodes``-equivalent distances — float32 rows, or int8 codes
+    dequantized ONCE per grid step on the frozen grid (FMA amortized
+    over every iteration of the walk);
+  * beam merge: ``ef`` masked-argmax rounds over (beam ∪ neighbours).
+
+Scores use the same NEG_INF sentinel as ``merge_topk`` (TPU vector
+units dislike real infinities); ``ops.beam_search`` normalizes padding
+back to -inf so callers see the reference contract.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.common.jax_compat import CompilerParams as _CompilerParams
+
+NEG_INF = -3.0e38  # finite -inf stand-in (matches merge_topk)
+_EPS = 1e-12       # angular-metric guard (matches repro.core.metrics)
+
+
+def _gather_rows(table: jnp.ndarray, idx: jnp.ndarray) -> jnp.ndarray:
+    """Gather rows of a VMEM-resident f32 table via one-hot matmul:
+    table [n, c], idx [r] (pre-clipped to [0, n)) -> [r, c]. Exactly one
+    unit term per output row, so values are copied exactly."""
+    n = table.shape[0]
+    onehot = (idx[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (idx.shape[0], n), 1)).astype(jnp.float32)
+    return jax.lax.dot_general(
+        onehot, table, dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _score_pairs(q: jnp.ndarray, rows: jnp.ndarray,
+                 metric: str) -> jnp.ndarray:
+    """Per-pair similarities: q [bq, d], rows [bq, m, d] -> [bq, m],
+    with the exact formulas of ``repro.core.metrics.similarity_matrix``
+    (higher is better)."""
+    dot = jnp.sum(q[:, None, :] * rows, axis=-1)
+    if metric == "ip":
+        return dot
+    if metric == "l2":
+        qn = jnp.sum(q * q, axis=-1)[:, None]
+        xn = jnp.sum(rows * rows, axis=-1)
+        return 2.0 * dot - qn - xn
+    if metric == "angular":
+        qn = jnp.sqrt(jnp.sum(q * q, axis=-1))[:, None] + _EPS
+        xn = jnp.sqrt(jnp.sum(rows * rows, axis=-1)) + _EPS
+        return dot / (qn * xn)
+    raise ValueError(f"unknown metric: {metric}")
+
+
+def _beam_kernel(q_ref, e_ref, data_ref, adj_ref, scale_ref, zero_ref,
+                 out_s_ref, out_i_ref, visited_ref, *, metric: str,
+                 ef: int, max_iters: int, quantized: bool):
+    bq = q_ref.shape[1]
+    n, m0 = adj_ref.shape[1], adj_ref.shape[2]
+    w = visited_ref.shape[1]
+
+    q = q_ref[0]
+    entry = e_ref[0]                                  # [bq] i32
+    # the shard tile, resident for the whole walk; int8 codes are
+    # dequantized once here and every iteration reuses the f32 tile
+    x = data_ref[0].astype(jnp.float32)
+    if quantized:
+        x = x * scale_ref[...] + zero_ref[...]
+    adjf = adj_ref[0].astype(jnp.float32)             # [n, m0]
+
+    # visited bitmask: packed int32 words, bit (node & 31) of word
+    # (node >> 5); seeded with the entry node (1 << 31 lands in the sign
+    # bit — fine, the mask is pure bit storage)
+    word_iota = jax.lax.broadcasted_iota(jnp.int32, (bq, w), 1)
+    visited_ref[...] = jnp.where(
+        word_iota == (entry[:, None] >> 5),
+        jnp.left_shift(jnp.int32(1), entry[:, None] & 31), 0)
+
+    e_score = _score_pairs(q, _gather_rows(x, entry)[:, None, :],
+                           metric)[:, 0]
+    cols_ef = jax.lax.broadcasted_iota(jnp.int32, (bq, ef), 1)
+    beam_s = jnp.where(cols_ef == 0, e_score[:, None], NEG_INF)
+    beam_i = jnp.where(cols_ef == 0, entry[:, None], -1)
+    expanded = jnp.zeros((bq, ef), jnp.int32)
+    cand_cols = jax.lax.broadcasted_iota(jnp.int32, (bq, ef + m0), 1)
+
+    def cond(carry):
+        beam_s, beam_i, expanded, it = carry
+        live = jnp.logical_and(expanded == 0, beam_i >= 0)
+        return jnp.logical_and(jnp.any(live), it < max_iters)
+
+    def body(carry):
+        beam_s, beam_i, expanded, it = carry
+        live = jnp.logical_and(expanded == 0, beam_i >= 0)
+        active = jnp.any(live, axis=1)                # [bq]
+        # select best unexpanded beam entry (ties -> lowest position)
+        sel = jnp.where(live, beam_s, NEG_INF)
+        j = jnp.argmax(sel, axis=1)
+        selmask = cols_ef == j[:, None]
+        node = jnp.max(jnp.where(selmask, beam_i, -1), axis=1)
+        expanded = jnp.where(
+            jnp.logical_and(selmask, active[:, None]), 1, expanded)
+        node_c = jnp.clip(node, 0)
+        nbrs = _gather_rows(adjf, node_c).astype(jnp.int32)   # [bq, m0]
+        nbr_c = jnp.clip(nbrs, 0)
+        # visited test: gather each neighbour's word (one-hot over the
+        # word axis), then extract its bit — arithmetic shift + mask is
+        # correct even when the word's sign bit is set
+        vis = visited_ref[...]
+        woh = (nbr_c[:, :, None] >> 5) == jax.lax.broadcasted_iota(
+            jnp.int32, (bq, m0, w), 2)
+        words = jnp.sum(jnp.where(woh, vis[:, None, :], 0), axis=2)
+        seen = jnp.bitwise_and(jnp.right_shift(words, nbr_c & 31), 1)
+        valid = jnp.logical_and(
+            jnp.logical_and(nbrs >= 0, seen == 0), active[:, None])
+        # mark all real neighbours visited; per-slot bitwise OR (NOT a
+        # sum) so duplicate slots in one adjacency row stay correct
+        mark = jnp.logical_and(nbrs >= 0, active[:, None])
+        bits = jnp.left_shift(jnp.int32(1), nbr_c & 31)
+        newvis = vis
+        for m in range(m0):
+            newvis = jnp.bitwise_or(newvis, jnp.where(
+                jnp.logical_and(woh[:, m, :], mark[:, m][:, None]),
+                bits[:, m][:, None], 0))
+        visited_ref[...] = newvis
+        # score gathered neighbour rows against the resident tile
+        rows = _gather_rows(x, nbr_c.reshape(bq * m0)).reshape(
+            bq, m0, -1)
+        sims = jnp.where(valid, _score_pairs(q, rows, metric), NEG_INF)
+        # merge: ef masked-argmax rounds over (beam ∪ neighbours) —
+        # same rounds idiom as merge_topk, ties to the lower slot, old
+        # beam ordered before new candidates (== lax.top_k ordering)
+        cand_s = jnp.concatenate([beam_s, sims], axis=1)
+        cand_i = jnp.concatenate(
+            [beam_i, jnp.where(valid, nbrs, -1)], axis=1)
+        cand_e = jnp.concatenate(
+            [expanded, jnp.zeros((bq, m0), jnp.int32)], axis=1)
+        work = cand_s
+        ns, ni, ne = [], [], []
+        for _ in range(ef):
+            jj = jnp.argmax(work, axis=1)
+            pick = cand_cols == jj[:, None]
+            best_s = jnp.max(jnp.where(pick, work, NEG_INF), axis=1)
+            # once only sentinels remain argmax re-picks a retired slot;
+            # dead picks must come back as (-1, NEG_INF, unexpanded) —
+            # same `alive` idiom as merge_topk
+            alive = best_s > NEG_INF / 2
+            ns.append(jnp.where(alive, best_s, NEG_INF))
+            ni.append(jnp.where(
+                alive, jnp.max(jnp.where(pick, cand_i, -1), axis=1), -1))
+            ne.append(jnp.where(
+                alive, jnp.max(jnp.where(pick, cand_e, 0), axis=1), 0))
+            work = jnp.where(pick, NEG_INF, work)
+        keep = active[:, None]
+        return (jnp.where(keep, jnp.stack(ns, axis=1), beam_s),
+                jnp.where(keep, jnp.stack(ni, axis=1), beam_i),
+                jnp.where(keep, jnp.stack(ne, axis=1), expanded),
+                it + 1)
+
+    beam_s, beam_i, _, _ = jax.lax.while_loop(
+        cond, body, (beam_s, beam_i, expanded, jnp.int32(0)))
+    out_s_ref[...] = beam_s[None]
+    out_i_ref[...] = beam_i[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("metric", "ef", "max_iters", "block_q", "interpret"))
+def beam_search_pallas(data: jnp.ndarray, bottom: jnp.ndarray,
+                       queries: jnp.ndarray, entries: jnp.ndarray, *,
+                       metric: str, ef: int, max_iters: int,
+                       scale: Optional[jnp.ndarray] = None,
+                       zero: Optional[jnp.ndarray] = None,
+                       block_q: int = 8, interpret: bool = False):
+    """Fused beam walk over a stack of graphs (see ``ref.py`` for the
+    shared contract). Grid is (graphs, query blocks); each step loads
+    its shard tile + adjacency into VMEM once and walks ``block_q``
+    queries to completion. Scores of padded slots come back as NEG_INF
+    (the ops layer normalizes them to -inf)."""
+    s, n, d = data.shape
+    m0 = bottom.shape[2]
+    c = queries.shape[1]
+    ef = min(ef, n)
+    quantized = data.dtype == jnp.int8
+
+    block_q = max(1, min(block_q, c))
+    pc = -(-c // block_q) * block_q
+    qp = jnp.zeros((s, pc, d), jnp.float32)
+    qp = qp.at[:, :c].set(queries.astype(jnp.float32))
+    # pad entries with node 0: padded lanes compute a real (discarded)
+    # walk, which keeps every gather index in range
+    ep = jnp.zeros((s, pc), jnp.int32).at[:, :c].set(
+        entries.astype(jnp.int32))
+    w_words = -(-n // 32)
+    if scale is None:
+        scale = jnp.ones((d,), jnp.float32)
+        zero = jnp.zeros((d,), jnp.float32)
+
+    kernel = functools.partial(_beam_kernel, metric=metric, ef=ef,
+                               max_iters=max_iters, quantized=quantized)
+    out_s, out_i = pl.pallas_call(
+        kernel,
+        grid=(s, pc // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda si, qi: (si, qi, 0)),
+            pl.BlockSpec((1, block_q), lambda si, qi: (si, qi)),
+            pl.BlockSpec((1, n, d), lambda si, qi: (si, 0, 0)),
+            pl.BlockSpec((1, n, m0), lambda si, qi: (si, 0, 0)),
+            pl.BlockSpec((1, d), lambda si, qi: (0, 0)),
+            pl.BlockSpec((1, d), lambda si, qi: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, ef), lambda si, qi: (si, qi, 0)),
+            pl.BlockSpec((1, block_q, ef), lambda si, qi: (si, qi, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, pc, ef), jnp.float32),
+            jax.ShapeDtypeStruct((s, pc, ef), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_q, w_words), jnp.int32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel")),
+        interpret=interpret,
+    )(qp, ep, data, bottom,
+      jnp.asarray(scale, jnp.float32).reshape(1, d),
+      jnp.asarray(zero, jnp.float32).reshape(1, d))
+    return out_s[:, :c], out_i[:, :c]

@@ -1,0 +1,53 @@
+"""Dispatch layer for the fused beam-search op.
+
+``beam_search`` picks the Pallas kernel on TPU and the jnp oracle
+everywhere else (same convention as ``merge_topk`` / ``quant_scores``).
+Inside ``shard_map`` callers must force ``use_kernel=False`` — Pallas
+calls cannot be traced there.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.beam_search.kernel import beam_search_pallas
+from repro.kernels.beam_search.ref import beam_search_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def beam_impl() -> str:
+    """Which implementation ``beam_search`` dispatches to here."""
+    return "pallas-kernel" if _on_tpu() else "xla-oracle"
+
+
+def beam_search(data: jnp.ndarray, bottom: jnp.ndarray,
+                queries: jnp.ndarray, entries: jnp.ndarray, *,
+                metric: str, ef: int, max_iters: int,
+                scale: Optional[jnp.ndarray] = None,
+                zero: Optional[jnp.ndarray] = None,
+                use_kernel: bool = True, block_q: int = 8,
+                interpret: bool = False
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused bottom-layer beam walk over a stack of graphs.
+
+    See ``ref.beam_search_ref`` for the shared shape/semantics contract:
+    data [S, n, d] (f32, or int8 with scale/zero), bottom [S, n, M0],
+    queries [S, C, d], entries [S, C] -> (scores [S, C, ef'],
+    local nodes [S, C, ef']) best-first, (-inf, -1) padded.
+    """
+    if not use_kernel or not _on_tpu():
+        return beam_search_ref(data, bottom, queries, entries,
+                               metric=metric, ef=ef, max_iters=max_iters,
+                               scale=scale, zero=zero)
+    out_s, out_i = beam_search_pallas(data, bottom, queries, entries,
+                                      metric=metric, ef=ef,
+                                      max_iters=max_iters, scale=scale,
+                                      zero=zero, block_q=block_q,
+                                      interpret=interpret)
+    # kernel pads with the finite NEG_INF sentinel; restore -inf
+    return jnp.where(out_i >= 0, out_s, -jnp.inf), out_i

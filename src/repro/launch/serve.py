@@ -2,7 +2,12 @@
 retrieval through a Pyramid datastore served by the distributed engine
 (lookups go through the futures-based ``PyramidClient`` session).
 
-PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 16
+For real launches, source the host-tuning environment first (tcmalloc
+preload when available + XLA host-platform flags; measured effect in
+API.md "Serving host environment"):
+
+    source scripts/serve_env.sh
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tokens 16
 """
 from __future__ import annotations
 

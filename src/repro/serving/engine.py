@@ -245,6 +245,11 @@ class Executor(threading.Thread):
         Returns ``[(ids [r.k * k_factor], scores [...]) for r in batch]``
         (``k_factor > 1`` on quantized engines: the wider partial feeds
         the coordinator's exact rerank).
+
+        ``hnsw_search`` defaults to the fused beam-walk op
+        (``repro.kernels.beam_search`` — Pallas kernel on TPU, batched
+        oracle elsewhere), so every executor batch, including
+        ``StreamEngine``'s per-decode-step lookups, rides it.
         """
         k = max(r.k for r in batch) * self.k_factor
         k = 1 << (k - 1).bit_length()   # bucket: log-many compiles total
