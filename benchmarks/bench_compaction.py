@@ -1,0 +1,193 @@
+"""Compaction-under-load benchmark: serving QPS / p99 / recall during a
+write storm, with the background compactor on vs off.
+
+Runs the same deterministic write+query storm twice against a
+store-published index served through :class:`repro.core.api.Brokers`:
+
+  * **off** — records accumulate in the delta log (threshold set beyond
+    the storm), so queries never share the process with a fold;
+  * **on** — the background compactor thread folds the log into freshly
+    published versions and hot-swaps the engine mid-storm.
+
+Reported per mode: query QPS, p50/p99 latency, recall@10 after the
+storm (the *on* run measures it on the post-swap engine over the final
+corpus — inserts applied, tombstones gone), compaction cycles and
+records folded. The non-``--quick`` run fails (exit 1) when compaction
+degrades storm p99 by more than 2x — the "maintenance must not stall
+serving" contract; CI's bench-gate additionally diffs the recall/QPS
+numbers of a fresh ``--quick`` run against the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.api import Brokers
+from repro.core.client import gather_arrays
+from repro.data.synthetic import clustered_vectors
+from repro.serving.engine import EngineShutdownError
+from repro.store import IndexStore
+
+P99_FACTOR = 2.0    # max allowed p99 degradation while compacting
+DRAIN_S = 300.0     # max wait for the background fold to finish
+
+
+def _timed_query(brokers, q):
+    """One timed batch; re-resolve the engine if a background hot-swap
+    retires it between lookup and submit (in-flight futures themselves
+    survive a swap — ``replace_index`` drains the old engine)."""
+    for _ in range(3):
+        eng = brokers.get_engine("bench")
+        t0 = time.perf_counter()
+        try:
+            ids, _ = gather_arrays(eng.submit(q, k=C.TOPK), C.TOPK, 300)
+            return ids, time.perf_counter() - t0
+        except EngineShutdownError:
+            continue
+    raise RuntimeError("query kept landing on a retiring engine")
+
+
+def _recall(ids, true_ids) -> float:
+    return sum(
+        len(set(np.asarray(a).tolist()) & set(b.tolist()))
+        for a, b in zip(ids, true_ids)) / true_ids.size
+
+
+def _storm(root: str, x: np.ndarray, cfg: PyramidConfig, *,
+           steps: int, q_batch: int, compact: bool) -> dict:
+    """One storm pass: journaled writes + timed query batches, the
+    compactor folding in a background thread when ``compact``."""
+    from repro.core.meta_index import build_pyramid_index
+
+    rng = np.random.default_rng(17)
+    n = len(x)
+    store = IndexStore(root)
+    store.publish(build_pyramid_index(x, cfg))
+
+    live = {i: x[i] for i in range(n)}
+    next_id, removed = n, set()
+    lat = []
+    with Brokers() as brokers:
+        brokers.engine_for("bench", store.load(), replicas=1)
+        comp = brokers.attach_maintenance(
+            "bench", store, rebalance=False, poll_s=0.02,
+            threshold_records=(24 if compact else 10 ** 9))
+        if compact:
+            comp.start()
+        try:
+            for step in range(steps):
+                base = x[rng.choice(n, 2)]
+                new = (base + 0.02 * rng.normal(size=base.shape)
+                       ).astype(np.float32)
+                comp.add_items(new)
+                for v in new:
+                    live[next_id] = v
+                    next_id += 1
+                if step % 4 == 3:
+                    pool = [i for i in sorted(live) if i not in removed]
+                    pick = rng.choice(len(pool), 2, replace=False)
+                    victims = np.asarray([pool[int(r)] for r in pick])
+                    comp.remove_items(victims)
+                    removed.update(victims.tolist())
+                    for v in victims.tolist():
+                        del live[v]
+                q = x[rng.choice(n, q_batch)]
+                ids, dt = _timed_query(brokers, q)
+                lat.append(dt)
+        finally:
+            if compact:
+                # let the background fold land (slow boxes: the cycle
+                # can outlast the storm) before reading the counters
+                deadline = time.time() + DRAIN_S
+                while comp.due() and time.time() < deadline:
+                    time.sleep(0.25)
+                comp.stop()
+        cycles_during = comp.cycles
+        comp.run_once(force=True)   # drain the tail either way
+
+        live_ids = np.asarray(sorted(live))
+        corpus = np.stack([live[i] for i in live_ids.tolist()])
+        queries = corpus[np.random.default_rng(19).choice(
+            len(corpus), q_batch * 4)]
+        true_pos, _ = M.brute_force_topk(queries, corpus, C.TOPK, "l2")
+        true_glob = live_ids[true_pos]
+        ids, _ = _timed_query(brokers, queries)
+        leak = set(np.asarray(ids).reshape(-1).tolist()) & removed
+        assert not leak, f"deleted ids resurfaced: {sorted(leak)[:5]}"
+
+    lat = np.asarray(lat)
+    return {
+        "compaction": "on" if compact else "off",
+        "steps": steps, "q_batch": q_batch,
+        "qps": round(steps * q_batch / float(lat.sum()), 1),
+        "p50_ms": round(1e3 * float(np.percentile(lat, 50)) / q_batch, 3),
+        "p99_ms": round(1e3 * float(np.percentile(lat, 99)) / q_batch, 3),
+        "recall_at_10_final": round(_recall(ids, true_glob), 4),
+        "cycles_during_storm": cycles_during,
+        "records_folded": comp.folded_records,
+        "delta_log_len_after": len(comp.index.delta_log()),
+    }
+
+
+def run(quick: bool = False, n: int | None = None,
+        d: int | None = None) -> list:
+    n = n or (2_000 if quick else 10_000)
+    d = d or (16 if quick else C.N_DIM)
+    steps = 32 if quick else 96
+    q_batch = 8 if quick else 16
+    shards = 4 if quick else C.NUM_SHARDS
+    cfg = PyramidConfig(
+        metric="l2", num_shards=shards,
+        meta_size=min(C.META_SIZE, max(shards, n // 16)),
+        sample_size=min(n, 8_000), branching_factor=2, max_degree=16,
+        max_degree_upper=8, ef_construction=60, ef_search=80,
+        kmeans_iters=8, seed=0)
+    x = clustered_vectors(n, d, C.N_CLUSTERS, seed=0)
+
+    rows = []
+    for compact in (False, True):
+        with tempfile.TemporaryDirectory() as root:
+            row = _storm(root, x, cfg, steps=steps, q_batch=q_batch,
+                         compact=compact)
+        rows.append(row)
+        C.emit(f"compaction_{row['compaction']}",
+               1e6 / row["qps"],
+               f"p99={row['p99_ms']}ms "
+               f"recall={row['recall_at_10_final']} "
+               f"cycles={row['cycles_during_storm']}")
+    assert rows[1]["cycles_during_storm"] >= 1, rows[1]
+    assert rows[1]["records_folded"] >= steps, rows[1]
+    assert rows[1]["delta_log_len_after"] == 0, rows[1]
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--d", type=int, default=None)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    rows = run(quick=args.quick, n=args.n, d=args.d)
+    payload = {"quick": args.quick, "rows": rows}
+    C.write_bench(args.out, "compaction", payload)
+    json.dump({"figure": "compaction", **payload}, sys.stdout, indent=2)
+    print()
+    off, on = rows
+    if not args.quick and on["p99_ms"] > P99_FACTOR * off["p99_ms"]:
+        print(f"COMPACTION GATE FAILED: p99 {on['p99_ms']}ms with "
+              f"compaction active > {P99_FACTOR}x the {off['p99_ms']}ms "
+              f"baseline", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

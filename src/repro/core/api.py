@@ -182,7 +182,8 @@ class Brokers:
                 loser = new
         if current is old:
             if old is not None:
-                old.shutdown()
+                old.drain()     # in-flight futures finish on the old
+                old.shutdown()  # engine; only then tear it down
             return new
         loser.shutdown()   # never installed: don't leak its threads
         if current is not None:
@@ -190,6 +191,29 @@ class Brokers:
         raise RuntimeError(
             f"brokers: engine '{name}' was removed (brokers shut down?) "
             f"during replace_index")
+
+    def attach_maintenance(self, name: str, store, **opts):
+        """Create a :class:`repro.store.maintenance.Compactor` wired to
+        this broker entry: it folds ``name``'s delta log into new
+        versions of ``store`` and hot-swaps the engine through
+        :meth:`replace_index`. The compactor is installed on the
+        running engine (drain-hook step clock +
+        ``stats()['maintenance']``) when one exists; call ``.start()``
+        on the result for the background thread, or drive
+        ``run_once()``/``tick()`` deterministically."""
+        from repro.store import IndexStore
+        from repro.store.maintenance import Compactor
+        if not isinstance(store, IndexStore):
+            store = IndexStore(str(store))
+        eng = None
+        with self._lock:
+            eng = self._engines.get(name)
+        index = eng.index if eng is not None else store.load()
+        compactor = Compactor(store, index, brokers=self, name=name,
+                              **opts)
+        if eng is not None:
+            compactor.install(eng)
+        return compactor
 
     # -- client surface ----------------------------------------------------
 

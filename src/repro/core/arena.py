@@ -230,7 +230,9 @@ def _stack_host(index, quantize=None) -> Dict[str, np.ndarray]:
     unreachable (no neighbours, id -1), so their code values are inert.
     """
     subs = index.subs
-    n_pad = max(g.n for g in subs)
+    # an all-deleted shard has n == 0: give it one pad row (id -1, no
+    # neighbours) so the walk lands on an inert slot the merges filter
+    n_pad = max(1, max(g.n for g in subs))
     l_pad = max(1, max(g.max_level for g in subs))
     mu = max([lv.shape[1] for g in subs for lv in g.neighbors[1:]],
              default=1)
@@ -253,7 +255,7 @@ def _stack_host(index, quantize=None) -> Dict[str, np.ndarray]:
         for lvl in range(1, g.max_level + 1):
             lv = g.neighbors[lvl]
             upper[i, lvl - 1, :n, : lv.shape[1]] = lv
-        entry[i] = int(g.entry)
+        entry[i] = int(g.entry) if n else 0  # empty shard: enter pad row
         nul[i] = int(g.max_level)
     return {"data": data, "ids": ids, "bottom": bottom, "upper": upper,
             "entry": entry, "num_upper_levels": nul}

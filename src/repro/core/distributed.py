@@ -168,7 +168,7 @@ def search_single_host_python(index: PyramidIndex, queries: np.ndarray,
     all_ids = np.full((b, w, k), -1, np.int64)
     for s in range(w):
         sel = np.where(mask[:, s])[0]
-        if sel.size == 0:
+        if sel.size == 0 or index.subs[s].n == 0:
             continue
         arrs = index.subs[s].device_arrays()   # pre-arena: private upload
         kk = min(k, index.subs[s].n)

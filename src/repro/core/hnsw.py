@@ -339,7 +339,7 @@ def build_hnsw(data: np.ndarray,
     data = np.ascontiguousarray(data, dtype=np.float32)
     n, d = data.shape
     if n == 0:
-        raise ValueError("cannot build HNSW on an empty dataset")
+        return empty_hnsw(d, metric=metric, max_degree=max_degree)
     b = _Builder(d, metric, max_degree, max_degree_upper,
                  ef_construction, seed, capacity=n)
     for i in range(n):
@@ -351,6 +351,20 @@ def build_hnsw(data: np.ndarray,
     return HNSWGraph(
         data=data, ids=np.asarray(ids), neighbors=neighbors,
         levels=b.levels[:n], entry=b.entry, metric=metric)
+
+
+def empty_hnsw(d: int, *, metric: str = "l2",
+               max_degree: int = 32) -> HNSWGraph:
+    """A zero-item sub-HNSW (entry = -1). Deleting every item of a shard
+    leaves this — the shard keeps its routing slot (meta centers still
+    label it) but contributes nothing: searches skip it, and the arena
+    stacks it as a single pad row (id -1) that every merge filters."""
+    return HNSWGraph(
+        data=np.zeros((0, d), dtype=np.float32),
+        ids=np.zeros((0,), dtype=np.int64),
+        neighbors=[np.full((0, max_degree), -1, dtype=np.int32)],
+        levels=np.zeros((0,), dtype=np.int32),
+        entry=-1, metric=metric)
 
 
 # ---------------------------------------------------------------------------
@@ -564,6 +578,8 @@ def search_numpy(graph: HNSWGraph, queries: np.ndarray, k: int,
     b.adj = graph.neighbors
     out_ids = np.full((queries.shape[0], k), -1, dtype=np.int64)
     out_scores = np.full((queries.shape[0], k), -np.inf, dtype=np.float32)
+    if graph.n == 0:
+        return out_ids, out_scores
     for i, q in enumerate(np.asarray(queries, dtype=np.float32)):
         sim_e = float(M.similarity_matrix_np(
             q[None, :], graph.data[graph.entry][None, :], graph.metric)[0, 0])

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import functools
 import warnings
-from typing import Set, Tuple
+from typing import Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -80,3 +80,72 @@ route_queries.__wrapped__ = _route_queries.__wrapped__
 def access_rate(mask: jnp.ndarray) -> float:
     """Fraction of sub-HNSWs touched per query (paper Fig. 5 metric)."""
     return float(jnp.mean(jnp.sum(mask, axis=1) / mask.shape[1]))
+
+
+def refresh_centroids(index, *, seed: Optional[int] = None):
+    """Recompute the routing layer from the CURRENT items (in place).
+
+    Under sustained inserts/deletes the live data drifts away from the
+    kmeans centroids frozen at build time and routing recall/balance
+    decay. This re-runs the build-time routing stages — sample →
+    kmeans++ → meta-HNSW → balanced min-cut partition → item
+    reassignment — over today's vectors, then rebuilds every sub-HNSW
+    through ``shard_seed`` (``w`` stays fixed; split/merge changes it,
+    see ``repro.build.planner``). Deterministic given ``seed``
+    (defaults to the config seed), so replay/recovery via the store
+    reproduces the identical index. Expensive (a full rebuild minus
+    preprocessing) — the maintenance compactor triggers it only when
+    drift crosses its threshold, never on the serving path.
+    """
+    import numpy as np
+
+    from repro.core.kmeans import kmeans
+    from repro.core.meta_index import _assign_items, _sample
+    from repro.core.partition import balance_stats, partition_graph
+
+    cfg = index.config
+    seed = cfg.seed if seed is None else seed
+    live = [g for g in index.subs if g.n]
+    if not live:
+        return index
+    x = np.concatenate([g.data for g in live])
+    ids = np.concatenate([g.ids for g in live])
+    # MIPS norm-replication stores one id in several shards: collapse
+    # to one row per global id before re-partitioning
+    _, first = np.unique(ids, return_index=True)
+    first = np.sort(first)
+    x, ids = x[first], ids[first]
+    n = x.shape[0]
+    m = min(cfg.meta_size, max(cfg.num_shards, n // 4))
+    rng = np.random.default_rng(seed)
+    sample = _sample(x, cfg.sample_size, rng)
+    centers, counts = kmeans(sample, m, iters=cfg.kmeans_iters,
+                             spherical=cfg.is_mips, seed=seed,
+                             init="kmeans++")
+    metric = "ip" if cfg.is_mips else cfg.metric
+    meta = H.build_hnsw(np.asarray(centers, np.float32), metric=metric,
+                        max_degree=cfg.max_degree,
+                        max_degree_upper=cfg.max_degree_upper,
+                        ef_construction=cfg.ef_construction, seed=seed)
+    weights = np.asarray(counts, dtype=np.float64) + 1.0
+    part_of_center = partition_graph(
+        meta.neighbors[0], weights, cfg.num_shards, seed=seed)
+    item_part = _assign_items(
+        x, meta.device_arrays(), part_of_center, metric)
+    for s in range(cfg.num_shards):
+        sel = item_part == s
+        index.subs[s] = H.build_hnsw(
+            x[sel], metric=metric, max_degree=cfg.max_degree,
+            max_degree_upper=cfg.max_degree_upper,
+            ef_construction=cfg.ef_construction,
+            seed=H.shard_seed(cfg.seed, s), ids=ids[sel])
+    index.meta = meta
+    index.part_of_center = part_of_center.astype(np.int32)
+    index.build_stats["sub_sizes"] = [g.n for g in index.subs]
+    index.build_stats["total_stored"] = sum(g.n for g in index.subs)
+    index.build_stats["balance"], _ = balance_stats(
+        weights, part_of_center, cfg.num_shards)
+    index.build_stats["centroid_refreshes"] = 1 + int(
+        index.build_stats.get("centroid_refreshes", 0))
+    index.invalidate_device_cache()
+    return index

@@ -11,15 +11,15 @@ the production middle ground between per-item graph insertion (hard to do
 well online) and the paper's full rebuild.
 
 Durability: when the index is attached to a published store version
-(``repro.store.IndexStore`` publish/load), every ``add_items`` call is
-journaled to that version's append-only delta log *after* it is applied,
-so inserts survive a restart — ``IndexStore.load`` replays the log
-through this same function (same ``shard_seed``, bit-identical rebuild).
-Removals are NOT journaled: publish a new version after ``remove_items``.
+(``repro.store.IndexStore`` publish/load), every ``add_items`` and
+``remove_items`` call is journaled to that version's append-only delta
+log *after* it is applied — inserts as vector records, removals as
+tombstones — so both survive a restart: ``IndexStore.load`` replays the
+log in journal order through these same functions (same ``shard_seed``,
+bit-identical rebuild).
 """
 from __future__ import annotations
 
-import logging
 from typing import List, Optional
 
 import numpy as np
@@ -27,8 +27,6 @@ import numpy as np
 from repro.core import hnsw as H
 from repro.core import metrics as M
 from repro.core.meta_index import PyramidIndex, _assign_items
-
-logger = logging.getLogger(__name__)
 
 
 def add_items(index: PyramidIndex, new_items: np.ndarray,
@@ -108,18 +106,25 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
     return index
 
 
-def remove_items(index: PyramidIndex, remove_ids: np.ndarray
-                 ) -> PyramidIndex:
+def remove_items(index: PyramidIndex, remove_ids: np.ndarray, *,
+                 log_delta: bool = True) -> PyramidIndex:
     """Delete items by global id; affected sub-HNSWs are rebuilt.
 
-    Not journaled: a store-attached index should publish a fresh version
-    after removals (the delta log only records inserts)."""
+    Removing every item of a shard leaves a truly-empty sub-HNSW
+    (``H.empty_hnsw``): searches skip it and the arena pads it with an
+    inert row, so a deleted id can never be returned by any path.
+
+    Durable on store-attached indexes: the removal is journaled as a
+    tombstone record *after* it is applied (``log_delta=False`` on the
+    replay path), so crash recovery cannot resurrect deleted vectors.
+    """
     cfg = index.config
     metric = "ip" if cfg.is_mips else cfg.metric
-    if index.delta_log() is not None:
-        logger.warning(
-            "remove_items on a store-attached index is not journaled: "
-            "publish a new version to persist the removal")
+    remove_ids = np.asarray(remove_ids, dtype=np.int64).ravel()
+    log = index.delta_log() if log_delta else None
+    if log is not None:
+        # fail BEFORE mutating, same contract as add_items
+        log.ensure_writable()
     # pin the high-water mark BEFORE freeing ids: a later add_items must
     # never hand a removed item's id to a new vector (delta replay onto
     # the published state would alias the id to both)
@@ -127,13 +132,16 @@ def remove_items(index: PyramidIndex, remove_ids: np.ndarray
     index.build_stats["max_assigned_id"] = max(
         occupied + [int(index.build_stats.get("max_assigned_id", -1))],
         default=-1)
-    to_remove = set(np.asarray(remove_ids).tolist())
+    to_remove = set(remove_ids.tolist())
     for s, old in enumerate(index.subs):
-        keep = np.asarray([int(i) not in to_remove for i in old.ids])
-        if keep.all():
+        keep = np.asarray([int(i) not in to_remove for i in old.ids],
+                          dtype=bool)
+        if keep.size and keep.all():
             continue
         if not keep.any():
-            keep[0] = True  # degenerate guard: keep one item
+            index.subs[s] = H.empty_hnsw(
+                old.d, metric=metric, max_degree=cfg.max_degree)
+            continue
         index.subs[s] = H.build_hnsw(
             old.data[keep], metric=metric, max_degree=cfg.max_degree,
             max_degree_upper=cfg.max_degree_upper,
@@ -142,4 +150,9 @@ def remove_items(index: PyramidIndex, remove_ids: np.ndarray
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
     index.invalidate_device_cache()   # subs changed: arena must rebuild
+    if log is not None:
+        # journal AFTER the in-memory apply (mirrors add_items): replay
+        # re-runs remove_items on the published state in journal order,
+        # so a crash can never resurrect a deleted vector
+        log.append_remove(remove_ids)
     return index

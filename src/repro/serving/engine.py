@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import logging
 import queue
 import threading
 import time
@@ -64,6 +65,8 @@ from repro.core.quant import exact_rerank_np
 from repro.core.router import effective_ef, route_queries
 from repro.kernels.merge_topk import merge_topk_np
 from repro.serving.faults import FaultSchedule
+
+logger = logging.getLogger(__name__)
 
 
 # the engine's base meta-search beam for routing; route_queries raises
@@ -547,6 +550,15 @@ class ServingEngine:
         self.redispatched = 0      # total re-enqueues (hedge + recovery)
         self.tracker = LatencyTracker()
         self.faults = fault_schedule
+        # maintenance observability: a background compactor
+        # (repro.store.maintenance) registers a stats provider here and
+        # hooks into the batch-drain tick — same deterministic step
+        # clock the fault schedule uses, never a timer
+        self._drain_hooks: List = []
+        self._maintenance_stats = None
+        # serving-layer delete filter (see add_tombstones): ids removed
+        # from the live index after this engine snapshotted its arena
+        self._tombstones = np.zeros((0,), np.int64)
 
         self.meta_arrays = index.meta_arrays()
         self.part_of_center = jnp.asarray(index.part_of_center)
@@ -658,6 +670,48 @@ class ServingEngine:
         fs = self.faults
         if fs is not None:
             fs.tick(self, actor)
+        for hook in list(self._drain_hooks):
+            try:
+                hook(actor)
+            except Exception:   # a maintenance hook must never be able
+                logger.exception("drain hook failed")   # to kill serving
+
+    def add_drain_hook(self, hook) -> None:
+        """Register ``hook(actor)`` to run at every executor batch-drain
+        boundary — the engine's deterministic step clock (exactly where
+        ``FaultSchedule.tick`` fires). The maintenance compactor uses
+        this to count work/poll cycles without wall-clock sleeps; hooks
+        run on executor threads and must not block."""
+        self._drain_hooks.append(hook)
+
+    def remove_drain_hook(self, hook) -> None:
+        try:
+            self._drain_hooks.remove(hook)
+        except ValueError:
+            pass
+
+    def set_maintenance_stats(self, provider) -> None:
+        """Attach a zero-arg callable returning the maintenance
+        subsystem's stats dict; surfaced as ``stats()['maintenance']``."""
+        self._maintenance_stats = provider
+
+    def add_tombstones(self, ids) -> None:
+        """Hide ``ids`` from every future result of this engine.
+
+        The engine serves the arena it snapshotted at construction, so a
+        ``remove_items`` applied to the live index stays visible here
+        until the next maintenance hot-swap publishes a folded index.
+        The maintenance write path calls this to close that gap: merged
+        results drop tombstoned ids immediately.  The set dies with the
+        engine — by the time a compaction cycle swaps in a new engine,
+        every journaled removal has been folded into its index.
+        """
+        ids = np.asarray(ids, dtype=np.int64).ravel()
+        if not ids.size:
+            return
+        with self._lock:
+            self._tombstones = np.unique(
+                np.concatenate([self._tombstones, ids]))
 
     @staticmethod
     def _replica_slot(name: str) -> int:
@@ -718,6 +772,25 @@ class ServingEngine:
                 self._spawn(shard, r)
             return self._live_replicas(shard)
 
+    def drain(self, timeout: float = 30.0) -> bool:
+        """Wait until every in-flight future has resolved; returns
+        ``False`` on timeout (stragglers then fail at ``shutdown``).
+
+        The hot-swap path (``Brokers.replace_index``) calls this on the
+        outgoing engine *after* installing its replacement: nothing new
+        arrives here, the executors are still alive, so queries
+        submitted before the swap complete normally instead of dying
+        with ``EngineShutdownError`` — hot-swaps are invisible to
+        callers holding futures."""
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            with self._lock:
+                if not self._pending:
+                    return True
+            time.sleep(0.005)
+        with self._lock:
+            return not self._pending
+
     def stats(self) -> dict:
         """Public snapshot of engine state — replaces poking at
         ``engine.executors`` / ``engine._pending`` internals."""
@@ -763,6 +836,11 @@ class ServingEngine:
             "latency": self.tracker.snapshot(),
             "fault_step": self.faults.step if self.faults else 0,
             "queue_depths": [t.qsize() for t in self.topics],
+            # background maintenance (repro.store.maintenance), when a
+            # compactor is attached: cycles, folded records, rebalance
+            # ops, last published version
+            "maintenance": (self._maintenance_stats()
+                            if self._maintenance_stats else None),
         }
 
     def shutdown(self) -> None:
@@ -981,6 +1059,12 @@ class ServingEngine:
                     table_ids=table_ids, table_vecs=table_vecs,
                     metric=self.metric)
             found = top_ids[0] >= 0
+            tomb = self._tombstones
+            if tomb.size:
+                # serving-layer delete filter: the arena still holds a
+                # removed item's row until the next maintenance
+                # hot-swap, but its id must never reach a caller
+                found &= ~np.isin(top_ids[0], tomb)
             entry.fut.set_result(QueryResult(
                 entry.req.query_id, top_ids[0][found],
                 top_scores[0][found],

@@ -23,10 +23,11 @@ from repro.store.format import (StoreCorruptionError, StoreError,
                                 content_checksum, graph_from_arrays,
                                 graph_to_arrays, read_segment,
                                 write_segment)
+from repro.store.maintenance import Compactor
 from repro.store.store import DeltaLog, IndexStore, StoreReader
 
 __all__ = [
-    "DeltaLog", "IndexStore", "StoreReader",
+    "Compactor", "DeltaLog", "IndexStore", "StoreReader",
     "StoreCorruptionError", "StoreError",
     "content_checksum", "graph_from_arrays", "graph_to_arrays",
     "read_segment", "write_segment",

@@ -10,8 +10,8 @@ On-disk layout (one store root per dataset name)::
           meta.npz                # meta-HNSW + part_of_center
           shard-0000.npz ...      # one segment per sub-HNSW
           delta/
-            LOG                   # append-only jsonl of insert records
-            d000001.npz ...       # one record per add_items call
+            LOG                   # append-only jsonl of update records
+            d000001.npz ...       # one per add_items / remove_items call
 
 Crash-safety invariants:
 
@@ -82,13 +82,18 @@ def _fsync_dir(path: str) -> None:
 
 
 class DeltaLog:
-    """Append-only insert journal of one published version.
+    """Append-only update journal of one published version.
 
-    Each :func:`repro.core.updates.add_items` call appends one record
-    (the *raw* vectors plus their resolved global ids — replay goes back
-    through ``add_items`` itself, so the rebuilt shards are bit-identical
-    to the pre-crash in-memory index). The jsonl ``LOG`` line, written
-    and fsynced *after* the record file, is the commit point.
+    Each :func:`repro.core.updates.add_items` call appends one insert
+    record (the *raw* vectors plus their resolved global ids) and each
+    ``remove_items`` call one tombstone record (ids only, LOG line
+    tagged ``"op": "remove"`` — insert lines carry no ``op`` key, so an
+    insert-only log is byte-identical to the pre-tombstone format).
+    Replay applies records in journal order back through
+    ``add_items``/``remove_items`` themselves, so the rebuilt shards are
+    bit-identical to the pre-crash in-memory index. The jsonl ``LOG``
+    line, written and fsynced *after* the record file, is the commit
+    point.
     """
 
     def __init__(self, directory: str):
@@ -167,10 +172,21 @@ class DeltaLog:
         the same version cannot clobber each other's records or
         interleave LOG lines (cross-host writers on network filesystems
         without flock semantics are out of scope)."""
+        return self._commit(
+            {"vectors": np.ascontiguousarray(vectors, np.float32),
+             "ids": np.ascontiguousarray(ids, np.int64)}, {})
+
+    def append_remove(self, ids: np.ndarray) -> str:
+        """Commit one tombstone record (ids only; the LOG line carries
+        ``"op": "remove"`` — insert lines stay untagged, keeping
+        insert-only logs byte-identical to the pre-tombstone format)."""
+        return self._commit(
+            {"ids": np.ascontiguousarray(ids, np.int64)},
+            {"op": "remove"})
+
+    def _commit(self, arrays: Dict[str, np.ndarray], extra: dict) -> str:
         self.ensure_writable()
         os.makedirs(self.dir, exist_ok=True)
-        arrays = {"vectors": np.ascontiguousarray(vectors, np.float32),
-                  "ids": np.ascontiguousarray(ids, np.int64)}
         with open(os.path.join(self.dir, ".lock"), "w") as lk:
             fcntl.flock(lk, fcntl.LOCK_EX)
             self._heal_tail()
@@ -199,9 +215,10 @@ class DeltaLog:
             # loss, and a committed line pointing at a missing file
             # would turn every future replay into StoreCorruptionError
             _fsync_dir(self.dir)
-            line = json.dumps({"file": fname, "checksum": checksum,
-                               "n": int(arrays["ids"].shape[0]),
-                               "t": time.time()})
+            line = json.dumps(dict(
+                {"file": fname, "checksum": checksum,
+                 "n": int(arrays["ids"].shape[0]),
+                 "t": time.time()}, **extra))
             with open(self.log_path, "a") as f:
                 f.write(line + "\n")
                 f.flush()
@@ -210,14 +227,46 @@ class DeltaLog:
             self._log_size = os.path.getsize(self.log_path)
         return fname
 
-    def replay(self, *, verify: bool = True
-               ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
-        """Yield committed ``(vectors, ids)`` records in append order."""
-        for entry in self._entries():
+    def replay(self, *, verify: bool = True, start: int = 0
+               ) -> Iterator[Tuple[str, Optional[np.ndarray], np.ndarray]]:
+        """Yield committed ``(op, vectors, ids)`` records in append
+        order — ``op`` is ``"insert"`` (vectors present) or ``"remove"``
+        (tombstone, vectors ``None``). ``start`` skips the first
+        ``start`` records (the compactor's catch-up reads only the tail
+        appended after its fold snapshot)."""
+        for entry in self._entries()[start:]:
             arrays = read_segment(
                 os.path.join(self.dir, entry["file"]),
                 entry["checksum"] if verify else "")
-            yield arrays["vectors"], arrays["ids"]
+            op = entry.get("op", "insert")
+            yield op, arrays.get("vectors"), arrays["ids"]
+
+    def truncate(self) -> int:
+        """Drop every committed record (the compactor calls this once
+        the log's contents are folded into a *newer published version*
+        — after that rename the records are dead weight: recovery loads
+        the newer version, never this log). Removes the record files and
+        empties ``LOG`` under the same advisory lock appends take.
+        Returns the number of records dropped."""
+        if not os.path.isdir(self.dir):
+            return 0   # never appended to: nothing to drop
+        with open(os.path.join(self.dir, ".lock"), "w") as lk:
+            fcntl.flock(lk, fcntl.LOCK_EX)
+            entries = self._entries()
+            # empty LOG first: a crash mid-truncate must not leave
+            # committed lines pointing at deleted record files
+            with open(self.log_path, "w") as f:
+                f.flush()
+                os.fsync(f.fileno())
+            for entry in entries:
+                try:
+                    os.remove(os.path.join(self.dir, entry["file"]))
+                except OSError:
+                    pass
+            _fsync_dir(self.dir)
+            self._count = 0
+            self._log_size = 0
+        return len(entries)
 
 
 class StoreReader:
@@ -299,20 +348,29 @@ class IndexStore:
                 os.path.join(self.versions_dir, v, _MANIFEST)))
 
     def latest(self) -> Optional[str]:
-        """The published version id: ``CURRENT`` if it points at a
-        complete version, else the newest complete version on disk (the
-        crash-between-rename-and-flip window)."""
-        cur_path = os.path.join(self.root, _CURRENT)
+        """The published version id — newest-wins between a valid
+        ``CURRENT`` and the newest complete version on disk. The rename
+        that lands a version IS its commit point: a crash between the
+        rename and the ``CURRENT`` flip (a normal publish, or the
+        compactor dying between its publish/truncate and flip steps)
+        must still recover to the newer version, or the compactor's
+        already-truncated delta records would be lost. ``_set_current``
+        is newest-wins too, so ``CURRENT`` never legitimately points
+        behind the newest complete version."""
+        cur = None
         try:
-            with open(cur_path) as f:
+            with open(os.path.join(self.root, _CURRENT)) as f:
                 vid = f.read().strip()
             if vid and os.path.exists(
                     os.path.join(self.versions_dir, vid, _MANIFEST)):
-                return vid
+                cur = vid
         except OSError:
             pass
         vs = self.versions()
-        return vs[-1] if vs else None
+        newest = vs[-1] if vs else None
+        if self._vnum(newest) > self._vnum(cur):
+            return newest
+        return cur
 
     def version_dir(self, vid: str) -> str:
         return os.path.join(self.versions_dir, vid)
@@ -327,13 +385,17 @@ class IndexStore:
     # -- publish -----------------------------------------------------------
 
     def publish(self, index: PyramidIndex, *,
-                keep: Optional[int] = None) -> str:
+                keep: Optional[int] = None,
+                set_current: bool = True) -> str:
         """Write ``index`` as a new version and flip ``CURRENT`` to it.
 
         Returns the version id. The index object is attached to the new
         version's (empty) delta log, so subsequent ``add_items`` calls
         are journaled against what was just published. ``keep`` runs
-        :meth:`gc` afterwards.
+        :meth:`gc` afterwards. ``set_current=False`` skips the
+        ``CURRENT`` flip (the compactor sequences truncate between the
+        rename and the flip; the rename alone already commits — see
+        :meth:`latest`).
         """
         os.makedirs(self.versions_dir, exist_ok=True)
         tmp = os.path.join(self.root, f".tmp-{uuid.uuid4().hex[:12]}")
@@ -417,7 +479,8 @@ class IndexStore:
         except BaseException:
             shutil.rmtree(tmp, ignore_errors=True)
             raise
-        self._set_current(vid)
+        if set_current:
+            self._set_current(vid)
         index.attach_delta_log(
             DeltaLog(os.path.join(self.version_dir(vid), "delta")))
         if keep is not None:
@@ -429,6 +492,12 @@ class IndexStore:
         if vid and vid.startswith("v") and vid[1:].isdigit():
             return int(vid[1:])
         return -1
+
+    def set_current(self, vid: str) -> None:
+        """Publicly flip ``CURRENT`` (newest-wins; see
+        :meth:`_set_current`) — the compactor's final metadata step
+        after publishing with ``set_current=False`` and truncating."""
+        self._set_current(vid)
 
     def _set_current(self, vid: str) -> None:
         """Flip ``CURRENT`` to ``vid`` — newest-wins under an advisory
@@ -469,9 +538,11 @@ class IndexStore:
         """Materialise a full :class:`PyramidIndex` from a version.
 
         Checksums are verified (``verify=False`` skips), the version's
-        delta log is replayed through ``add_items`` (same rebuild path,
-        same ``shard_seed`` — bit-identical to the pre-restart index),
-        and the index is attached to that log so further inserts keep
+        delta log is replayed in journal order through
+        ``add_items``/``remove_items`` (same rebuild path, same
+        ``shard_seed`` — bit-identical to the pre-restart index, and
+        tombstones guarantee deleted vectors stay deleted), and the
+        index is attached to that log so further updates keep
         journaling.
         """
         reader = self.reader(version, verify=verify)
@@ -491,9 +562,12 @@ class IndexStore:
                 QuantParams.from_manifest(reader.manifest["quant"]))
         delta = reader.delta_log()
         if replay_delta:
-            from repro.core.updates import add_items
-            for vectors, ids in delta.replay(verify=verify):
-                add_items(index, vectors, ids, log_delta=False)
+            from repro.core.updates import add_items, remove_items
+            for op, vectors, ids in delta.replay(verify=verify):
+                if op == "remove":
+                    remove_items(index, ids, log_delta=False)
+                else:
+                    add_items(index, vectors, ids, log_delta=False)
         if attach_delta:
             index.attach_delta_log(delta)
         return index

@@ -135,15 +135,47 @@ def test_add_items_all_shards_empty_starts_at_zero():
 
 def test_add_after_remove_does_not_reuse_freed_ids(small_index):
     """Regression: ids freed by remove_items must not be handed to new
-    vectors — store delta replay applies inserts onto the *published*
-    state (removals are not journaled), so a reused id would alias two
-    different vectors after recovery."""
+    vectors — store delta replay applies the journal onto the
+    *published* state, where a reused id would transiently alias two
+    different vectors between the insert and tombstone records."""
     x, idx = small_index
     remove_items(idx, np.arange(1990, 2000))
     add_items(idx, clustered_vectors(5, 16, 2, seed=12))
     stored = np.concatenate([g.ids for g in idx.subs])
     new_ids = set(stored.tolist()) - set(range(2000))
     assert new_ids == set(range(2000, 2005))
+
+
+def test_remove_whole_shard_never_resurfaces(small_index):
+    """Regression for the ``keep[0] = True`` degenerate guard: deleting
+    every item of a shard used to silently retain one. The shard must
+    come out truly empty and none of the three search paths — the fused
+    arena pipeline, the per-shard python loop, and the serving engine —
+    may ever return a removed id."""
+    from repro.core.client import gather_arrays
+    from repro.core.distributed import search_single_host_python
+    from repro.serving.engine import ServingEngine
+
+    x, idx = small_index
+    sizes = [g.n for g in idx.subs]
+    victim_shard = int(np.argmin(sizes))
+    victims = idx.subs[victim_shard].ids.copy()
+    assert victims.size > 0
+    remove_items(idx, victims)
+    assert idx.subs[victim_shard].n == 0    # truly empty, no survivor
+    gone = set(victims.tolist())
+    # query AT the deleted points: the strongest bait for resurfacing
+    q = x[victims[:16]]
+    ids_fused, _, _ = search_single_host(idx, q, k=10)
+    assert not (set(np.asarray(ids_fused).reshape(-1).tolist()) & gone)
+    ids_py, _, _ = search_single_host_python(idx, q, k=10)
+    assert not (set(np.asarray(ids_py).reshape(-1).tolist()) & gone)
+    eng = ServingEngine(idx, replicas=1)
+    try:
+        ids_eng, _ = gather_arrays(eng.submit(q, k=10), 10, timeout=60)
+    finally:
+        eng.shutdown()
+    assert not (set(np.asarray(ids_eng).reshape(-1).tolist()) & gone)
 
 
 def test_update_then_quality_holds(small_index):

@@ -1,0 +1,462 @@
+"""Online index maintenance (repro.store.maintenance): delta-log
+compaction into a freshly published version under a live write+query
+storm, tombstone durability, shard split/merge + centroid refresh, and
+crash recovery at every commit boundary of the compaction protocol.
+
+The storm driver is fully deterministic — batch-drain-step scheduling,
+no sleeps: writes journal through the compactor's write path, queries
+flow through the brokers-resolved engine between steps, and the
+compactor's ``tick()`` fires exactly when the record threshold crosses.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.build.planner import (BuildError, merge_shards, plan_rebalance,
+                                 split_shard)
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.api import Brokers
+from repro.core.client import gather_arrays
+from repro.core.distributed import search_single_host
+from repro.core.meta_index import build_pyramid_index
+from repro.core.router import refresh_centroids
+from repro.core.updates import add_items, remove_items
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.store import Compactor, IndexStore
+
+
+def _cfg(num_shards=4, **kw):
+    base = dict(metric="l2", num_shards=num_shards, meta_size=24,
+                sample_size=400, branching_factor=2, max_degree=10,
+                max_degree_upper=5, ef_construction=30, ef_search=50,
+                kmeans_iters=4)
+    base.update(kw)
+    return PyramidConfig(**base)
+
+
+def _stored_ids(index):
+    return np.sort(np.concatenate([g.ids for g in index.subs]))
+
+
+def _recall(ids, true_ids):
+    return sum(len(set(a.tolist()) & set(b.tolist()))
+               for a, b in zip(np.asarray(ids), true_ids)) / true_ids.size
+
+
+# ---------------------------------------------------------------------------
+# the acceptance storm: >= 100 records folded + hot-swapped under serving
+# ---------------------------------------------------------------------------
+
+
+def test_write_query_storm_compacts_and_hot_swaps(tmp_path):
+    """Deterministic write+query storm: 100 journaled records (inserts
+    and tombstones) stream through the compactor while queries keep
+    flowing through the brokers engine. Mid-storm threshold crossings
+    fold the log into new published versions and hot-swap the engine;
+    at the end the delta log is empty, recall@10 is within 2% of a
+    storm-free build over the same final corpus, and no deleted id ever
+    appeared in any result."""
+    rng = np.random.default_rng(0)
+    x = clustered_vectors(600, 12, 8, seed=0)
+    idx = build_pyramid_index(x, _cfg())
+    store = IndexStore(str(tmp_path))
+    store.publish(idx)
+
+    live = {i: x[i] for i in range(600)}     # ground-truth shadow copy
+    removed = set()
+    next_id = 600
+
+    with Brokers() as brokers:
+        brokers.engine_for("storm", store.load(), replicas=1)
+        comp = brokers.attach_maintenance(
+            "storm", store, threshold_records=40, rebalance=False)
+
+        steps, leaks = 0, set()
+        for step in range(80):               # 80 inserts + 20 removes
+            base = x[rng.choice(600, 2)]
+            new = (base + 0.02 * rng.normal(size=base.shape)
+                   ).astype(np.float32)
+            comp.add_items(new)
+            for v in new:
+                live[next_id] = v
+                next_id += 1
+            if step % 4 == 3:
+                pool = [i for i in sorted(live) if i not in removed]
+                victims = np.asarray(
+                    [pool[int(r)] for r in rng.choice(len(pool), 2,
+                                                      replace=False)])
+                comp.remove_items(victims)
+                removed.update(victims.tolist())
+                for v in victims.tolist():
+                    del live[v]
+            futs = None
+            if step % 4 == 0:                # queries keep flowing —
+                eng = brokers.get_engine("storm")   # submitted BEFORE the
+                q = x[rng.choice(600, 4)]           # tick, so in-flight
+                futs = eng.submit(q, k=10)          # futures cross any
+            comp.tick()                      # fold + hot-swap (drain
+            if futs is not None:             # semantics: they resolve
+                ids, _ = gather_arrays(futs, 10, 120)   # on the old engine)
+                leaks |= (set(np.asarray(ids).reshape(-1).tolist())
+                          & removed)
+                steps += 1
+        assert steps >= 20 and not leaks, leaks
+
+        comp.run_once(force=True)            # drain the tail
+        assert len(comp.index.delta_log()) == 0
+        assert comp.cycles >= 3              # >=2 mid-storm + final
+        assert comp.folded_records >= 100
+        assert comp.truncated_records >= 100
+
+        # final recall on the post-swap engine vs a storm-free build
+        live_ids = np.asarray(sorted(live))
+        corpus = np.stack([live[i] for i in live_ids.tolist()])
+        assert np.array_equal(_stored_ids(comp.index), live_ids)
+        q = query_set(corpus, 30, seed=1)
+        true_pos, _ = M.brute_force_topk(q, corpus, 10, "l2")
+        true_glob = live_ids[true_pos]
+
+        eng = brokers.get_engine("storm")
+        got, _ = gather_arrays(eng.submit(q, k=10), 10, 120)
+        leaks = set(np.asarray(got).reshape(-1).tolist()) & removed
+        assert not leaks, leaks
+        storm_recall = _recall(got, true_glob)
+
+    fresh = build_pyramid_index(corpus, _cfg())
+    ref_ids, _, _ = search_single_host(fresh, q, k=10)
+    ref_recall = _recall(ref_ids, true_pos)
+    assert storm_recall >= ref_recall - 0.02, (storm_recall, ref_recall)
+
+
+# ---------------------------------------------------------------------------
+# crash windows: the publish rename is the single commit point
+# ---------------------------------------------------------------------------
+
+
+class SimulatedCrash(RuntimeError):
+    pass
+
+
+def _apply_ops(comp, x):
+    """The shared op script for crash tests: 3 insert records + 2
+    tombstone records. Returns the expected surviving id set."""
+    rng = np.random.default_rng(7)
+    for i in range(3):
+        base = x[rng.choice(len(x), 3)]
+        comp.add_items((base + 0.02 * rng.normal(size=base.shape)
+                        ).astype(np.float32))
+    comp.remove_items(np.asarray([5, 6, 7]))
+    comp.remove_items(np.asarray([len(x) + 1]))   # a storm-era insert
+    expected = set(range(len(x))) | set(range(len(x), len(x) + 9))
+    return expected - {5, 6, 7, len(x) + 1}
+
+
+@pytest.mark.faults
+@pytest.mark.parametrize("crash_at", ["fold", "publish", "truncate", "swap"])
+def test_crash_window_recovers_exactly_once(tmp_path, crash_at):
+    """Kill the compactor at each commit boundary — before the publish,
+    between publish and truncation, between truncation and the CURRENT
+    flip, and mid hot-swap. Recovery via ``ServingEngine.from_store``
+    must land on the identical logical state (every journaled record
+    applied exactly once, tombstones never resurrected) and answer
+    within 2% recall of the fault-free run."""
+    from repro.serving.engine import ServingEngine
+
+    x = clustered_vectors(300, 10, 6, seed=3)
+    index = build_pyramid_index(x, _cfg(num_shards=2))
+
+    # fault-free control: same ops, completed cycle
+    ctrl_store = IndexStore(str(tmp_path / "ctrl"))
+    ctrl_store.publish(index)
+    ctrl = Compactor(ctrl_store, ctrl_store.load(), rebalance=False)
+    expected = _apply_ops(ctrl, x)
+    ctrl.run_once(force=True)
+    assert np.array_equal(_stored_ids(ctrl.index),
+                          np.asarray(sorted(expected)))
+
+    def boom(step):
+        if step == crash_at:
+            raise SimulatedCrash(step)
+
+    store = IndexStore(str(tmp_path / "crash"))
+    store.publish(index)
+    comp = Compactor(store, store.load(), rebalance=False,
+                     fault_hook=boom)
+    assert _apply_ops(comp, x) == expected
+    with pytest.raises(SimulatedCrash):
+        comp.run_once(force=True)
+
+    eng = ServingEngine.from_store(str(tmp_path / "crash"), replicas=1)
+    try:
+        # exactly-once: the recovered state holds precisely the
+        # surviving ids — nothing lost, duplicated, or resurrected —
+        # and is bit-identical to the fault-free run, shard by shard
+        assert np.array_equal(_stored_ids(eng.index),
+                              np.asarray(sorted(expected)))
+        for s in range(len(eng.index.subs)):
+            assert np.array_equal(eng.index.subs[s].ids,
+                                  ctrl.index.subs[s].ids)
+            assert np.array_equal(eng.index.subs[s].data,
+                                  ctrl.index.subs[s].data)
+        q = query_set(x, 20, seed=4)
+        got, _ = gather_arrays(eng.submit(q, k=10), 10, 120)
+        assert not (set(np.asarray(got).reshape(-1).tolist())
+                    & {5, 6, 7, len(x) + 1})
+    finally:
+        eng.shutdown()
+    # recall within 2% of the fault-free run over the same corpus
+    id_to_vec = {}
+    for g in ctrl.index.subs:
+        for i, v in zip(g.ids.tolist(), g.data):
+            id_to_vec[i] = v
+    live_ids = np.asarray(sorted(id_to_vec))
+    corpus = np.stack([id_to_vec[i] for i in live_ids.tolist()])
+    true_pos, _ = M.brute_force_topk(q, corpus, 10, "l2")
+    true_glob = live_ids[true_pos]
+    ctrl_ids, _, _ = search_single_host(ctrl.index, q, k=10)
+    assert (_recall(got, true_glob)
+            >= _recall(ctrl_ids, true_glob) - 0.02)
+
+
+# ---------------------------------------------------------------------------
+# tombstone durability (satellite 2)
+# ---------------------------------------------------------------------------
+
+
+def test_insert_only_log_stays_byte_identical(tmp_path):
+    """Insert-only delta logs must not grow an ``op`` field — replay
+    compatibility with logs written before tombstones existed."""
+    x = clustered_vectors(400, 10, 6, seed=5)
+    index = build_pyramid_index(x, _cfg(num_shards=2))
+    store = IndexStore(str(tmp_path))
+    store.publish(index)
+    idx = store.load()
+    add_items(idx, clustered_vectors(6, 10, 2, seed=6))
+    add_items(idx, clustered_vectors(4, 10, 2, seed=7))
+    log_path = idx.delta_log().dir
+    with open(os.path.join(log_path, "LOG")) as f:
+        text = f.read()
+    assert text.count("\n") == 2
+    assert '"op"' not in text
+    remove_items(idx, np.asarray([0, 1]))
+    with open(os.path.join(log_path, "LOG")) as f:
+        lines = f.read().splitlines()
+    assert '"op"' not in lines[0] and '"op"' not in lines[1]
+    assert '"remove"' in lines[2]
+
+
+def test_tombstones_survive_restart(tmp_path):
+    """``remove_items`` after a publish must not resurrect on reload —
+    the regression this PR's delta-log tombstones exist to prevent."""
+    x = clustered_vectors(400, 10, 6, seed=8)
+    index = build_pyramid_index(x, _cfg(num_shards=2))
+    store = IndexStore(str(tmp_path))
+    store.publish(index)
+    idx = store.load()
+    add_items(idx, clustered_vectors(5, 10, 2, seed=9))
+    remove_items(idx, np.asarray([3, 4, 400, 401]))
+    add_items(idx, clustered_vectors(3, 10, 2, seed=10))
+
+    recovered = store.load()    # replays inserts AND tombstones in order
+    assert np.array_equal(_stored_ids(recovered), _stored_ids(idx))
+    gone = {3, 4, 400, 401}
+    assert not (set(_stored_ids(recovered).tolist()) & gone)
+    ids, _, _ = search_single_host(recovered, x[[3, 4]], k=10)
+    assert not (set(np.asarray(ids).reshape(-1).tolist()) & gone)
+
+
+# ---------------------------------------------------------------------------
+# rebalance planning + ops (tentpole satellites)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def balanced_index():
+    x = clustered_vectors(800, 12, 8, seed=11)
+    return x, build_pyramid_index(x, _cfg())
+
+
+def test_plan_rebalance_balanced_is_noop(balanced_index):
+    _, idx = balanced_index
+    assert plan_rebalance(idx) is None
+
+
+def test_plan_rebalance_size_skew_splits(balanced_index):
+    x, base = balanced_index
+    idx = store_roundtrip_copy(base)
+    # pile inserts near one shard's items until it dominates
+    s = int(np.argmax([g.n for g in idx.subs]))
+    seed_pts = idx.subs[s].data
+    rng = np.random.default_rng(12)
+    for _ in range(9):
+        pick = seed_pts[rng.choice(len(seed_pts), 50)]
+        add_items(idx, (pick + 0.01 * rng.normal(size=pick.shape)
+                        ).astype(np.float32), log_delta=False)
+    sizes = [g.n for g in idx.subs]
+    heavy = int(np.argmax(sizes))
+    assert sizes[heavy] > 2.0 * (sum(sizes) / len(sizes))
+    op = plan_rebalance(idx, split_factor=2.0)
+    assert op == ("split", heavy)
+
+    w = len(idx.subs)
+    before = _stored_ids(idx)
+    split_shard(idx, heavy)
+    assert len(idx.subs) == w + 1
+    assert idx.config.num_shards == w + 1
+    assert idx.subs[heavy].n > 0 and idx.subs[w].n > 0
+    assert np.array_equal(_stored_ids(idx), before)   # no item lost
+    # routing still lands on every item's shard: self-hit stays high
+    probe = np.concatenate([idx.subs[heavy].data[:20],
+                            idx.subs[w].data[:20]])
+    want = np.concatenate([idx.subs[heavy].ids[:20],
+                           idx.subs[w].ids[:20]])
+    ids, _, _ = search_single_host(idx, probe, k=4)
+    hit = np.asarray([w_ in row for w_, row in
+                      zip(want.tolist(), np.asarray(ids).tolist())])
+    assert hit.mean() >= 0.9
+
+
+def test_plan_rebalance_latency_skew_splits(balanced_index):
+    _, base = balanced_index
+    idx = store_roundtrip_copy(base)
+    sizes = [g.n for g in idx.subs]
+    hot = int(np.argmax(sizes))
+    lat = {s: {"n": 100, "p50": 1.0, "p99": 2.0}
+           for s in range(len(sizes))}
+    lat[hot] = {"n": 100, "p50": 5.0, "p99": 40.0}
+    op = plan_rebalance(idx, engine_stats={"latency": lat},
+                        latency_factor=4.0)
+    assert op == ("split", hot)
+    # without stats the same index plans nothing (sizes are balanced)
+    assert plan_rebalance(idx) is None
+
+
+def test_merge_small_shards(balanced_index):
+    x, base = balanced_index
+    idx = store_roundtrip_copy(base)
+    sizes = [g.n for g in idx.subs]
+    small = np.argsort(sizes)[:2].tolist()
+    # shrink the two smallest shards to a handful of items each
+    for s in small:
+        victims = idx.subs[s].ids[4:]
+        if victims.size:
+            remove_items(idx, victims, log_delta=False)
+    op = plan_rebalance(idx, merge_factor=0.25)
+    a, b = sorted(small)
+    assert op == ("merge", a, b)
+
+    w = len(idx.subs)
+    before = set(_stored_ids(idx).tolist())
+    merge_shards(idx, a, b)
+    assert len(idx.subs) == w - 1
+    assert idx.config.num_shards == w - 1
+    assert set(_stored_ids(idx).tolist()) == before
+    part = np.asarray(idx.part_of_center)
+    assert part.min() >= 0 and part.max() < w - 1
+    probe = idx.subs[a].data[:10]
+    ids, _, _ = search_single_host(idx, probe, k=4)
+    hit = [i in row for i, row in
+           zip(idx.subs[a].ids[:10].tolist(), np.asarray(ids).tolist())]
+    assert np.mean(hit) >= 0.9
+
+
+def test_split_shard_rejects_degenerate(balanced_index):
+    _, base = balanced_index
+    idx = store_roundtrip_copy(base)
+    from repro.core import hnsw as H
+    d = idx.subs[0].data.shape[1]
+    idx.subs[0] = H.empty_hnsw(d, metric="l2",
+                               max_degree=idx.config.max_degree)
+    idx.invalidate_device_cache()
+    with pytest.raises(BuildError, match="cannot split"):
+        split_shard(idx, 0)
+
+
+def test_refresh_centroids_preserves_quality(balanced_index):
+    x, base = balanced_index
+    idx = store_roundtrip_copy(base)
+    rng = np.random.default_rng(13)
+    drift = clustered_vectors(200, 12, 4, seed=14) + 3.0
+    add_items(idx, drift.astype(np.float32), log_delta=False)
+    refresh_centroids(idx)
+    assert idx.build_stats["centroid_refreshes"] == 1
+    # every live vector must still be found at its own position
+    probe_ids = rng.choice(_stored_ids(idx), 40, replace=False)
+    id_to_vec = {}
+    for g in idx.subs:
+        for i, v in zip(g.ids.tolist(), g.data):
+            id_to_vec[i] = v
+    probe = np.stack([id_to_vec[i] for i in probe_ids.tolist()])
+    ids, _, _ = search_single_host(idx, probe, k=4)
+    hit = [i in row for i, row in
+           zip(probe_ids.tolist(), np.asarray(ids).tolist())]
+    assert np.mean(hit) >= 0.9
+
+
+def store_roundtrip_copy(index):
+    """Deep-copy an index the way the compactor does: through the
+    store's serialisation (keeps fixtures immutable across tests)."""
+    import tempfile
+    with tempfile.TemporaryDirectory() as root:
+        store = IndexStore(root)
+        store.publish(index)
+        return store.load(attach_delta=False)
+
+
+# ---------------------------------------------------------------------------
+# compactor unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_run_once_below_threshold_is_noop(tmp_path):
+    x = clustered_vectors(300, 10, 6, seed=15)
+    store = IndexStore(str(tmp_path))
+    store.publish(build_pyramid_index(x, _cfg(num_shards=2)))
+    comp = Compactor(store, store.load(), threshold_records=10,
+                     rebalance=False)
+    comp.add_items(clustered_vectors(3, 10, 2, seed=16))
+    assert comp.run_once() is None          # 1 record < threshold 10
+    assert comp.cycles == 0
+    assert comp.tick() is None
+    vid = comp.run_once(force=True)         # force folds regardless
+    assert vid is not None and comp.cycles == 1
+    assert len(comp.index.delta_log()) == 0
+    st = comp.stats()
+    assert st["folded_records"] == 1 and st["pending_records"] == 0
+
+
+def test_compactor_requires_store_attached_index():
+    x = clustered_vectors(300, 10, 6, seed=17)
+    idx = build_pyramid_index(x, _cfg(num_shards=2))
+
+    class FakeStore:
+        root = "nowhere"
+    comp = Compactor(FakeStore(), idx, rebalance=False)
+    with pytest.raises(ValueError, match="store-attached"):
+        comp.run_once(force=True)
+
+
+def test_compaction_cycle_applies_split(tmp_path):
+    """A size-skewed shard splits during the cycle and the published
+    version carries the new shard count (reload agrees)."""
+    x = clustered_vectors(600, 12, 8, seed=18)
+    store = IndexStore(str(tmp_path))
+    store.publish(build_pyramid_index(x, _cfg()))
+    comp = Compactor(store, store.load(), split_factor=2.0)
+    idx = comp.index
+    s = int(np.argmax([g.n for g in idx.subs]))
+    seed_pts = idx.subs[s].data
+    rng = np.random.default_rng(19)
+    for _ in range(8):
+        pick = seed_pts[rng.choice(len(seed_pts), 50)]
+        comp.add_items((pick + 0.01 * rng.normal(size=pick.shape)
+                        ).astype(np.float32))
+    w = len(idx.subs)
+    comp.run_once(force=True)
+    assert comp.rebalance_ops and comp.rebalance_ops[0][0] == "split"
+    assert len(comp.index.subs) == w + 1
+    reloaded = store.load()
+    assert reloaded.config.num_shards == w + 1
+    assert np.array_equal(_stored_ids(reloaded), _stored_ids(comp.index))
