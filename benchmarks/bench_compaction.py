@@ -33,6 +33,7 @@ from repro.core import metrics as M
 from repro.core.api import Brokers
 from repro.core.client import gather_arrays
 from repro.data.synthetic import clustered_vectors
+from repro.obs import MetricsRegistry
 from repro.serving.engine import EngineShutdownError
 from repro.store import IndexStore
 
@@ -62,7 +63,8 @@ def _recall(ids, true_ids) -> float:
 
 
 def _storm(root: str, x: np.ndarray, cfg: PyramidConfig, *,
-           steps: int, q_batch: int, compact: bool) -> dict:
+           steps: int, q_batch: int, compact: bool,
+           with_metrics: bool = False) -> dict:
     """One storm pass: journaled writes + timed query batches, the
     compactor folding in a background thread when ``compact``."""
     from repro.core.meta_index import build_pyramid_index
@@ -75,8 +77,14 @@ def _storm(root: str, x: np.ndarray, cfg: PyramidConfig, *,
     live = {i: x[i] for i in range(n)}
     next_id, removed = n, set()
     lat = []
+    # --metrics: one registry per storm pass — engine_for threads it into
+    # the ServingEngine, attach_maintenance inherits it, and hot-swaps
+    # preserve it (replace_index reuses the old engine's registry), so the
+    # snapshot spans the whole storm including post-swap engines
+    registry = MetricsRegistry() if with_metrics else None
+    engine_kw = {} if registry is None else {"registry": registry}
     with Brokers() as brokers:
-        brokers.engine_for("bench", store.load(), replicas=1)
+        brokers.engine_for("bench", store.load(), replicas=1, **engine_kw)
         comp = brokers.attach_maintenance(
             "bench", store, rebalance=False, poll_s=0.02,
             threshold_records=(24 if compact else 10 ** 9))
@@ -125,6 +133,8 @@ def _storm(root: str, x: np.ndarray, cfg: PyramidConfig, *,
 
     lat = np.asarray(lat)
     return {
+        **({"metrics": registry.snapshot()} if registry is not None
+           else {}),
         "compaction": "on" if compact else "off",
         "steps": steps, "q_batch": q_batch,
         "qps": round(steps * q_batch / float(lat.sum()), 1),
@@ -138,7 +148,7 @@ def _storm(root: str, x: np.ndarray, cfg: PyramidConfig, *,
 
 
 def run(quick: bool = False, n: int | None = None,
-        d: int | None = None) -> list:
+        d: int | None = None, with_metrics: bool = False) -> list:
     n = n or (2_000 if quick else 10_000)
     d = d or (16 if quick else C.N_DIM)
     steps = 32 if quick else 96
@@ -156,7 +166,7 @@ def run(quick: bool = False, n: int | None = None,
     for compact in (False, True):
         with tempfile.TemporaryDirectory() as root:
             row = _storm(root, x, cfg, steps=steps, q_batch=q_batch,
-                         compact=compact)
+                         compact=compact, with_metrics=with_metrics)
         rows.append(row)
         C.emit(f"compaction_{row['compaction']}",
                1e6 / row["qps"],
@@ -172,11 +182,15 @@ def run(quick: bool = False, n: int | None = None,
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--metrics", action="store_true",
+                    help="embed a per-storm MetricsRegistry snapshot "
+                         "in the BENCH JSON")
     ap.add_argument("--n", type=int, default=None)
     ap.add_argument("--d", type=int, default=None)
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    rows = run(quick=args.quick, n=args.n, d=args.d)
+    rows = run(quick=args.quick, n=args.n, d=args.d,
+               with_metrics=args.metrics)
     payload = {"quick": args.quick, "rows": rows}
     C.write_bench(args.out, "compaction", payload)
     json.dump({"figure": "compaction", **payload}, sys.stdout, indent=2)

@@ -43,6 +43,7 @@ from benchmarks import common as C
 from repro.common.config import PyramidConfig
 from repro.common.registry import get_arch
 from repro.models.transformer import init_params
+from repro.obs import MetricsRegistry
 from repro.serving.batcher import Request
 from repro.serving.retrieval import Datastore, build_datastore
 from repro.serving.stream import StreamEngine
@@ -80,13 +81,16 @@ def _requests(cfg, sessions: int, n_new: int, seed: int):
 
 
 def _run_engine(params, cfg, ds, reqs, *, overlap: bool, num_slots: int,
-                max_seq: int, rerank_factor: int = RERANK_FACTOR):
+                max_seq: int, rerank_factor: int = RERANK_FACTOR,
+                registry=None):
+    extra = {} if registry is None else {"registry": registry}
     with StreamEngine(params, cfg, num_slots=num_slots, max_seq=max_seq,
                       datastore=ds, knn_k=8, lam=0.25, overlap=overlap,
                       quantize=True, rerank_factor=rerank_factor,
                       replicas=REPLICAS, hedge=False,
                       executor_batch=EXECUTOR_BATCH,
-                      linger_s=LINGER_S, net_delay_s=NET_DELAY_S) as eng:
+                      linger_s=LINGER_S, net_delay_s=NET_DELAY_S,
+                      **extra) as eng:
         for r in reqs:
             eng.submit(r)
         done = eng.run_until_drained()
@@ -96,9 +100,12 @@ def _run_engine(params, cfg, ds, reqs, *, overlap: bool, num_slots: int,
     return tokens, st
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False, with_metrics: bool = False) -> dict:
     cfg = get_arch("qwen3-1.7b").reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
+    # one registry across every measured engine: counters accumulate over
+    # the grid and the snapshot lands in the BENCH JSON (--metrics)
+    registry = MetricsRegistry() if with_metrics else None
 
     if quick:
         sizes = [(16, 17), (32, 17)]          # (n_seqs, seq_len)
@@ -135,11 +142,13 @@ def run(quick: bool = False) -> dict:
             tok_o, st_o = _run_engine(params, cfg, ds, reqs,
                                       overlap=True,
                                       num_slots=num_slots,
-                                      max_seq=max_seq)
+                                      max_seq=max_seq,
+                                      registry=registry)
             tok_s, st_s = _run_engine(params, cfg, ds, reqs,
                                       overlap=False,
                                       num_slots=num_slots,
-                                      max_seq=max_seq)
+                                      max_seq=max_seq,
+                                      registry=registry)
             assert tok_o == tok_s, "overlap changed decode semantics"
             ret = st_o["retrieval"]
             row = {
@@ -174,7 +183,7 @@ def run(quick: bool = False) -> dict:
         reqs = _requests(cfg, concurrency[-1], n_new, seed=7)
         tok, st = _run_engine(params, cfg, ds, reqs, overlap=True,
                               num_slots=num_slots, max_seq=max_seq,
-                              rerank_factor=rf)
+                              rerank_factor=rf, registry=registry)
         ret = st["retrieval"]
         sweep.append({
             "rerank_factor": rf,
@@ -194,16 +203,22 @@ def run(quick: bool = False) -> dict:
         },
         "overlap_speedup_largest": big["overlap_speedup"],
     }
-    return {"quick": quick, "rows": rows, "rerank_sweep": sweep,
-            "summary": summary}
+    payload = {"quick": quick, "rows": rows, "rerank_sweep": sweep,
+               "summary": summary}
+    if registry is not None:
+        payload["metrics"] = registry.snapshot()
+    return payload
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--metrics", action="store_true",
+                    help="embed a MetricsRegistry snapshot of the "
+                         "measured engines in the BENCH JSON")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    payload = run(quick=args.quick)
+    payload = run(quick=args.quick, with_metrics=args.metrics)
     C.write_bench(args.out, "decode_stream", payload)
     json.dump({"figure": "decode_stream", **payload}, sys.stdout, indent=2)
     print()

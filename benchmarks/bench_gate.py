@@ -29,6 +29,25 @@ Refreshing baselines (after an intentional perf/recall change)::
 
 which copies the fresh artifacts over ``benchmarks/baselines/`` —
 commit the result. The CI workflow documents the same flow.
+
+Observability overhead gate (``--obs-overhead``): one engine serves
+interleaved query passes with its ``Tracer`` toggled off/on. Three
+checks:
+
+  * **implied tracing overhead < ``--overhead-tol`` (default 3%)** —
+    computed as (spans recorded per query) x (microbenched cost per
+    span op) / (per-query latency with tracing off). Every factor is a
+    low-variance measurement, so this assertion is CI-stable; a direct
+    wall-clock A/B is not — on shared 2-CPU runners the run-to-run QPS
+    noise of an *unchanged* engine is +-5% (measured), far above the
+    ~1% signal.
+  * **wall-clock A/B sanity ceiling ``--overhead-ceiling`` (default
+    25%)** — the paired off/on QPS comparison is printed for the log
+    and only fails the gate when tracing-on falls off a cliff.
+  * **disabled-path microbench < ``--disabled-ns``/op** — a disabled
+    registry's ``counter.inc`` and a ``NULL_TRACER`` span must stay
+    near-free, since the hot path keeps its instrumentation callsites
+    even with observability off.
 """
 from __future__ import annotations
 
@@ -41,6 +60,9 @@ from typing import Dict, Iterator, Tuple
 
 RECALL_TOL = 0.02
 QPS_TOL = 0.30
+OVERHEAD_TOL = 0.03       # tracing-on may cost at most 3% QPS (implied)
+OVERHEAD_CEILING = 0.25   # wall-clock A/B hard sanity ceiling
+DISABLED_NS = 2000.0      # ns/op ceiling for disabled counters / null spans
 
 
 def _numeric_leaves(obj, path: str = "") -> Iterator[Tuple[str, float]]:
@@ -107,9 +129,137 @@ def gate_file(name: str, baseline, fresh, *, recall_tol: float,
     return violations, notes
 
 
+def _span_op_cost(tracer, iters: int = 20_000) -> float:
+    """Seconds per live ``span()`` context-manager op (the dominant
+    per-query tracing cost in the engine hot path)."""
+    import time
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        with tracer.span("obs_overhead_probe", i=0):
+            pass
+    return (time.perf_counter() - t0) / iters
+
+
+def run_obs_overhead(*, quick: bool, tol: float, ceiling: float,
+                     disabled_ns: float) -> None:
+    """Obs-on vs obs-off QPS comparison + disabled-path microbench.
+    Exits 1 on violation. Imports the repro stack lazily so the plain
+    artifact-diff path keeps working without jax installed."""
+    import time
+
+    from repro.common.config import PyramidConfig
+    from repro.core.client import gather_arrays
+    from repro.core.meta_index import build_pyramid_index
+    from repro.data.synthetic import clustered_vectors, query_set
+    from repro.obs import NULL_TRACER, MetricsRegistry, Tracer
+    from repro.serving.engine import ServingEngine
+
+    n, d, reps, batches = ((1500, 12, 5, 6) if quick
+                           else (6000, 24, 9, 10))
+    x = clustered_vectors(n, d, 12, seed=0)
+    cfg = PyramidConfig(
+        metric="l2", num_shards=4, meta_size=48,
+        sample_size=min(n, 800), branching_factor=2, max_degree=12,
+        max_degree_upper=6, ef_construction=40, ef_search=50,
+        kmeans_iters=6, seed=0)
+    index = build_pyramid_index(x, cfg)
+    q = query_set(x, 24, seed=3)
+    k = 10
+
+    def timed(eng) -> float:
+        # several sequential batches per timing so the pass is long
+        # enough (~100ms) that thread-scheduling jitter cannot swamp a
+        # few-percent per-query difference
+        t0 = time.perf_counter()
+        for _ in range(batches):
+            gather_arrays(eng.submit(q, k=k), k, 60.0)
+        return time.perf_counter() - t0
+
+    # Paired design: ONE engine, toggling ``tracer.enabled`` between
+    # quiescent passes, so the off/on passes share every confounder
+    # (thread placement, queue dynamics, jit caches). Hedging off: the
+    # hedge sweep's timer-driven re-dispatches must not perturb a pass.
+    # Metrics stay enabled in both modes — their cost is bounded
+    # separately by the disabled-path microbench below.
+    tracer = Tracer()
+    eng = ServingEngine(index, hedge=False, registry=MetricsRegistry(),
+                        tracer=tracer)
+    times = {"off": [], "on": []}
+    nq = batches * len(q)
+    try:
+        for mode in ("off", "on"):      # warm executors + jit caches
+            tracer.enabled = mode == "on"
+            timed(eng)
+            timed(eng)
+        n0 = len(tracer.snapshot())
+        for _ in range(reps):           # interleaved off/on pairs
+            for mode in ("off", "on"):
+                tracer.enabled = mode == "on"
+                times[mode].append(timed(eng))
+        spans_per_query = (len(tracer.snapshot()) - n0) / (reps * nq)
+    finally:
+        eng.shutdown()
+    best_off, best_on = min(times["off"]), min(times["on"])
+    measured = best_on / best_off - 1.0
+
+    # cost of one live span op: best of 3 tight microbench rounds (the
+    # low-variance estimator — unlike pass wall-clock, a 20k-iteration
+    # spin is immune to scheduler preemption at the percent level)
+    tracer.enabled = True
+    span_cost = min(_span_op_cost(tracer) for _ in range(3))
+    per_query_off = best_off / nq
+    implied = spans_per_query * span_cost / per_query_off
+    print(f"bench-gate: obs-overhead: off={best_off * 1e3:.2f}ms "
+          f"on={best_on * 1e3:.2f}ms (best of {reps}) "
+          f"measured={100 * measured:+.2f}% "
+          f"(sanity ceiling {100 * ceiling:.0f}%)")
+    print(f"bench-gate: obs-overhead: {spans_per_query:.2f} spans/query "
+          f"x {span_cost * 1e9:.0f}ns/span / "
+          f"{per_query_off * 1e6:.0f}us/query -> implied "
+          f"{100 * implied:.2f}% (tol {100 * tol:.0f}%)")
+
+    # disabled-path microbench: the hot path keeps its counters/spans
+    # even with obs off, so the off cost must stay near zero per op
+    reg = MetricsRegistry(enabled=False)
+    c = reg.counter("bench_gate_disabled_total", "overhead probe")
+    iters = 200_000
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        c.inc()
+    inc_ns = (time.perf_counter() - t0) / iters * 1e9
+    t0 = time.perf_counter()
+    for _ in range(iters // 10):
+        with NULL_TRACER.span("probe"):
+            pass
+    span_ns = (time.perf_counter() - t0) / (iters // 10) * 1e9
+    print(f"bench-gate: obs-overhead: disabled counter.inc "
+          f"{inc_ns:.0f}ns/op, null span {span_ns:.0f}ns/op "
+          f"(ceiling {disabled_ns:.0f}ns)")
+
+    violations = []
+    if implied > tol:
+        violations.append(
+            f"implied tracing overhead {100 * implied:.2f}% > "
+            f"{100 * tol:.0f}% tolerance")
+    if measured > ceiling:
+        violations.append(
+            f"measured tracing-on QPS overhead {100 * measured:.2f}% > "
+            f"{100 * ceiling:.0f}% sanity ceiling")
+    if inc_ns > disabled_ns or span_ns > disabled_ns:
+        violations.append(
+            f"disabled-path cost ({inc_ns:.0f}ns inc / {span_ns:.0f}ns "
+            f"span) above the {disabled_ns:.0f}ns/op ceiling")
+    if violations:
+        for v in violations:
+            print(f"bench-gate: obs-overhead FAILED: {v}",
+                  file=sys.stderr)
+        sys.exit(1)
+    print("bench-gate: obs-overhead OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--fresh", required=True,
+    ap.add_argument("--fresh", default=None,
                     help="directory with freshly generated BENCH_*.json")
     ap.add_argument("--baseline", default="benchmarks/baselines",
                     help="directory with the committed baselines")
@@ -118,7 +268,25 @@ def main() -> None:
     ap.add_argument("--update-baselines", action="store_true",
                     help="copy the fresh artifacts over the baselines "
                          "(then commit them) instead of gating")
+    ap.add_argument("--obs-overhead", action="store_true",
+                    help="run the observability-overhead gate instead "
+                         "of the artifact diff (no --fresh needed)")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --obs-overhead: smaller index / fewer "
+                         "repetitions")
+    ap.add_argument("--overhead-tol", type=float, default=OVERHEAD_TOL)
+    ap.add_argument("--overhead-ceiling", type=float,
+                    default=OVERHEAD_CEILING)
+    ap.add_argument("--disabled-ns", type=float, default=DISABLED_NS)
     args = ap.parse_args()
+
+    if args.obs_overhead:
+        run_obs_overhead(quick=args.quick, tol=args.overhead_tol,
+                         ceiling=args.overhead_ceiling,
+                         disabled_ns=args.disabled_ns)
+        return
+    if not args.fresh:
+        ap.error("--fresh is required (unless --obs-overhead)")
 
     names = sorted(f for f in os.listdir(args.baseline)
                    if f.startswith("BENCH_") and f.endswith(".json")) \

@@ -38,12 +38,15 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.common.config import PyramidConfig
+from repro.obs import get_logger
 from repro.core import hnsw as H
 from repro.core import metrics as M
 from repro.core.kmeans import kmeans
 from repro.core.meta_index import PyramidIndex, _assign_items, _sample
 from repro.core.partition import balance_stats, edge_cut, partition_graph
 from repro.kernels.topk_distance import topk_similarity
+
+log = get_logger(__name__)
 
 
 class BuildError(RuntimeError):
@@ -330,7 +333,7 @@ def build_subgraphs(plan: BuildPlan, *, workers: int = 0,
                             "via": ("inline" if pool_broken else "pool"),
                             "error": repr(e)})
                         if verbose:
-                            print(f"[build] shard {shard} attempt "
+                            log.info(f"[build] shard {shard} attempt "
                                   f"{attempt} failed ({e!r}); retrying "
                                   f"{'inline' if pool_broken else 'in pool'}")
                     if not pool_broken:
@@ -397,7 +400,7 @@ def build_pyramid_index_parallel(
     stats.update(build_stats)
     stats["build_wall_s"] = round(time.perf_counter() - t0, 4)
     if verbose:
-        print(f"[pyramid] build stats: {stats}")
+        log.info(f"[pyramid] build stats: {stats}")
     return PyramidIndex(config=cfg, meta=plan.meta,
                         part_of_center=plan.part_of_center,
                         subs=subs, build_stats=stats)

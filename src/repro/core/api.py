@@ -86,14 +86,18 @@ class Brokers:
     # -- engine registry ---------------------------------------------------
 
     def engine_for(self, name: str, index: PyramidIndex, *,
-                   replicas: Optional[int] = None) -> ServingEngine:
+                   replicas: Optional[int] = None,
+                   **engine_kw) -> ServingEngine:
         """Get or create the engine serving ``name``.
 
         ``replicas=None`` means "attach to whatever is running". When an
         engine already exists, a conflicting request is never silently
         ignored: a different index config raises, a different replica
         count logs a structured warning (the running group is kept —
-        resize explicitly via ``engine.scale``).
+        resize explicitly via ``engine.scale``). Extra kwargs (e.g.
+        ``registry=``/``tracer=`` for observability, ``quantize=True``)
+        pass through to the :class:`ServingEngine` constructor and only
+        apply when this call actually creates the engine.
         """
         with self._lock:   # checks under the lock: a concurrent
             eng = self._engines.get(name)   # replace_index must not hand
@@ -101,7 +105,7 @@ class Brokers:
                 return self._check_attach(name, eng, index, replicas)
         # engine startup (array builds, thread spawns, jit warmup) is
         # expensive: build outside the lock, install with a re-check
-        new = ServingEngine(index, replicas=replicas or 1)
+        new = ServingEngine(index, replicas=replicas or 1, **engine_kw)
         with self._lock:
             eng = self._engines.get(name)
             if eng is None:
@@ -169,7 +173,11 @@ class Brokers:
             old = self._engines.get(name)
         if old is None:
             return None
-        new = ServingEngine(index, replicas=old.replicas)
+        # the replacement inherits the old engine's registry and tracer:
+        # hedge/expiry/swap counters stay monotonic across hot-swaps
+        # (registration is idempotent) and one trace spans the swap
+        new = ServingEngine(index, replicas=old.replicas,
+                            registry=old.obs, tracer=old.tracer)
         for s in range(min(old.w, new.w)):
             live = old.replica_count(s)
             if live >= 1 and live != new.replica_count(s):
@@ -209,6 +217,9 @@ class Brokers:
         with self._lock:
             eng = self._engines.get(name)
         index = eng.index if eng is not None else store.load()
+        if eng is not None:   # share the serving observability plane:
+            opts.setdefault("registry", eng.obs)   # one scrape / trace
+            opts.setdefault("tracer", eng.tracer)  # covers both
         compactor = Compactor(store, index, brokers=self, name=name,
                               **opts)
         if eng is not None:

@@ -29,6 +29,9 @@ import numpy as np
 from repro.common.config import PyramidConfig
 from repro.core.meta_index import PyramidIndex
 from repro.data.synthetic import clustered_vectors, norm_spread_vectors
+from repro.obs import get_logger
+
+log = get_logger(__name__)
 
 
 def save_index(index: PyramidIndex, path: str) -> None:
@@ -120,12 +123,12 @@ def main() -> None:
     t_build = time.time() - t0
     if args.quantize:
         qp = index.quant_params()   # publish persists this frozen grid
-        print(f"quantization grid: d={qp.d}, int8 "
+        log.info(f"quantization grid: d={qp.d}, int8 "
               f"(vector payload shrinks ~4x in quantize=True engines)")
     store = IndexStore(args.out)
     t0 = time.time()
     vid = store.publish(index, keep=args.gc_keep)
-    print(f"index built in {t_build:.1f}s "
+    log.info(f"index built in {t_build:.1f}s "
           f"(mode={index.build_stats['build_mode']}, "
           f"workers={index.build_stats['build_workers']}); "
           f"published {vid} to {args.out} in {time.time()-t0:.1f}s")

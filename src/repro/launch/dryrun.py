@@ -33,6 +33,9 @@ import numpy as np
 from repro.common.config import INPUT_SHAPES, ArchConfig, InputShape
 from repro.common.registry import get_arch, list_archs
 from repro.launch.mesh import make_production_mesh
+from repro.obs import get_logger
+
+log = get_logger(__name__)
 
 # hardware model (TPU v5e)
 PEAK_FLOPS = 197e12          # bf16 per chip
@@ -423,7 +426,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         rec = {"arch": arch, "shape": shape_name, "skipped": reason,
                "mesh": mesh_tag}
         _save(rec, out_dir, arch, shape_name, mesh_tag)
-        print(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
+        log.info(f"[dryrun] SKIP {arch} x {shape_name}: {reason}")
         return rec
 
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -437,12 +440,12 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     rec = analyse(lowered, compiled, cfg, shape, mesh.devices.size)
     rec.update({"mesh": mesh_tag, "lower_s": t_lower,
                 "compile_s": t_compile})
-    print(f"[dryrun] OK {arch} x {shape_name} [{mesh_tag}] "
+    log.info(f"[dryrun] OK {arch} x {shape_name} [{mesh_tag}] "
           f"lower={t_lower:.1f}s compile={t_compile:.1f}s "
           f"dominant={rec['roofline']['dominant']} "
           f"peak={rec['memory'].get('peak_bytes', 0)/2**30:.2f}GiB/chip")
-    print(f"  memory_analysis: {rec['memory']}")
-    print(f"  analytic: flops(global)={rec['analytic_flops_global']:.3e} "
+    log.info(f"  memory_analysis: {rec['memory']}")
+    log.info(f"  analytic: flops(global)={rec['analytic_flops_global']:.3e} "
           f"bytes/chip={rec['analytic_bytes_per_chip']:.3e} "
           f"coll/chip={rec['collective_bytes_per_chip']:.3e} "
           f"(hlo_raw flops/chip={rec['hlo_flops_per_chip_raw']:.2e})")
@@ -545,7 +548,7 @@ def run_pyramid(multi_pod: bool, out_dir: Optional[str], *,
         "capacity": "B" if naive else
             f"B*K/w*cf={batch_per_replica}*{branching}/{w}*1.5",
     }
-    print(f"[dryrun] OK {name} [{mesh_tag}] lower={t_lower:.1f}s "
+    log.info(f"[dryrun] OK {name} [{mesh_tag}] lower={t_lower:.1f}s "
           f"compile={t_compile:.1f}s "
           f"peak={rec['memory']['peak_bytes']/2**30:.2f}GiB/chip "
           f"flops/chip(raw)={rec['hlo_flops_per_chip_raw']:.3e}")
@@ -585,11 +588,11 @@ def main() -> None:
                     run_one(arch, shape, mp, args.out)
                 except Exception as e:
                     failures.append((arch, shape, mp, repr(e)))
-                    print(f"[dryrun] FAIL {arch} x {shape} "
+                    log.info(f"[dryrun] FAIL {arch} x {shape} "
                           f"{'multipod' if mp else 'pod'}: {e!r}")
     if failures:
         raise SystemExit(f"{len(failures)} dry-run failures: {failures}")
-    print("[dryrun] all combos lowered + compiled OK")
+    log.info("[dryrun] all combos lowered + compiled OK")
 
 
 if __name__ == "__main__":

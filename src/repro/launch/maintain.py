@@ -20,6 +20,10 @@ import argparse
 import json
 import time
 
+from repro.obs import get_logger
+
+log = get_logger(__name__)
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
@@ -63,27 +67,27 @@ def main() -> None:
         log = index.delta_log()
         n = len(log) if log is not None else 0
         vid = compactor.run_once(force=True)
-        print(f"compacted {n} delta records into {vid} "
+        log.info(f"compacted {n} delta records into {vid} "
               f"(store={args.store})")
-        print(json.dumps(compactor.stats(), indent=1))
+        log.info(json.dumps(compactor.stats(), indent=1))
         return
 
     # watch mode: the store is the only signal (writers live in other
     # processes), so poll the attached log length instead of the
     # in-process drain hook
-    print(f"watching {args.store} (threshold={args.threshold} records, "
+    log.info(f"watching {args.store} (threshold={args.threshold} records, "
           f"poll={args.poll_s}s; ctrl-c to stop)")
     try:
         while True:
             log = compactor.index.delta_log()
             if log is not None and len(log) >= args.threshold:
                 vid = compactor.run_once(force=True)
-                print(f"[maintain] cycle {compactor.cycles}: "
+                log.info(f"[maintain] cycle {compactor.cycles}: "
                       f"published {vid}, "
                       f"stats={json.dumps(compactor.stats())}")
             time.sleep(args.poll_s)
     except KeyboardInterrupt:
-        print(f"stopped after {compactor.cycles} cycles")
+        log.info(f"stopped after {compactor.cycles} cycles")
 
 
 if __name__ == "__main__":

@@ -2,6 +2,13 @@
 retrieval through a Pyramid datastore served by the distributed engine
 (lookups go through the futures-based ``PyramidClient`` session).
 
+Observability: ``--trace-out trace.json`` records the whole run —
+prefill, every decode step, and (with ``--retrieval``) the engine-side
+route/dispatch/batch/merge spans under them — as Chrome ``trace_event``
+JSON loadable in Perfetto / ``chrome://tracing``. ``--metrics-port``
+serves the run's registry at ``/metrics`` (Prometheus text) and
+``/stats`` while it lasts.
+
 For real launches, source the host-tuning environment first (tcmalloc
 preload when available + XLA host-platform flags; measured effect in
 API.md "Serving host environment"):
@@ -22,13 +29,16 @@ import numpy as np
 from repro.common.config import PyramidConfig
 from repro.common.registry import get_arch, list_archs
 from repro.models.transformer import grow_cache, init_params
+from repro.obs import MetricsRegistry, StatsServer, Tracer, get_logger
 from repro.serving.decode import decode_step, prefill_step
 from repro.serving.retrieval import (build_datastore, hidden_states,
                                      interpolate, knn_probs,
                                      open_datastore_client)
 
+log = get_logger(__name__)
 
-def main() -> None:
+
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b", choices=list_archs())
     ap.add_argument("--batch", type=int, default=2)
@@ -44,7 +54,22 @@ def main() -> None:
                     help="with --quantize: exact-rerank the top "
                          "rerank_factor * k quantized candidates")
     ap.add_argument("--lam", type=float, default=0.3)
-    args = ap.parse_args()
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace_event JSON of the run "
+                         "(validated; open in Perfetto)")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve /metrics (Prometheus) and /stats on "
+                         "this port for the duration of the run "
+                         "(0 = ephemeral)")
+    args = ap.parse_args(argv)
+
+    tracer = Tracer() if args.trace_out else None
+    registry = MetricsRegistry()
+    server = None
+    if args.metrics_port is not None:
+        server = StatsServer(registry, port=args.metrics_port).start()
+        log.info("[serve] stats server on :%d (/metrics /stats)",
+                 server.port)
 
     cfg = get_arch(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
@@ -60,6 +85,8 @@ def main() -> None:
 
     ds = None
     ds_client = None
+    span = (tracer.span if tracer else
+            (lambda *a, **kw: contextlib.nullcontext()))
     # the datastore client is a context manager owning its engine: the
     # with-block guarantees the executor threads come down on any exit
     # path (an abandoned engine can abort the interpreter mid-XLA-call)
@@ -72,21 +99,29 @@ def main() -> None:
                                 sample_size=400, branching_factor=2,
                                 max_degree=12, max_degree_upper=6,
                                 ef_construction=40, ef_search=60)
-            ds = build_datastore(params, cfg, [corpus], pyr)
-            ds_client = stack.enter_context(open_datastore_client(
-                ds, quantize=args.quantize,
-                rerank_factor=args.rerank_factor))
+            with span("serve.build_datastore"):
+                ds = build_datastore(params, cfg, [corpus], pyr)
+                ds_client = stack.enter_context(open_datastore_client(
+                    ds, quantize=args.quantize,
+                    rerank_factor=args.rerank_factor,
+                    registry=registry, tracer=tracer))
             stats = ds_client.stats()
-            print(f"[serve] datastore ready: {ds.values.shape[0]} entries, "
-                  f"served by {len(stats['executors'])} executors "
-                  f"(quantized={stats['quantized']}, "
-                  f"arena vector bytes={stats['arena_vector_bytes']})")
+            log.info(
+                "[serve] datastore ready: %d entries, served by %d "
+                "executors (quantized=%s, arena vector bytes=%d)",
+                ds.values.shape[0], len(stats["executors"]),
+                stats["quantized"], stats["arena_vector_bytes"])
+            if server is not None:
+                server.add_stats_provider("engine", ds_client.stats)
 
         t0 = time.time()
-        logits, cache = prefill_step(params, prompt, cfg=cfg)
-        cache = grow_cache(cache, args.prompt_len + args.tokens,
-                           window=cfg.sliding_window)
-        print(f"[serve] prefill {prompt.shape} in {time.time() - t0:.2f}s")
+        with span("serve.prefill", batch=args.batch,
+                  prompt_len=args.prompt_len):
+            logits, cache = prefill_step(params, prompt, cfg=cfg)
+            cache = grow_cache(cache, args.prompt_len + args.tokens,
+                               window=cfg.sliding_window)
+        log.info("[serve] prefill %s in %.2fs", tuple(prompt.shape),
+                 time.time() - t0)
 
         tok = jnp.argmax(logits[:, -1:].astype(jnp.float32),
                          -1).astype(jnp.int32)
@@ -96,27 +131,36 @@ def main() -> None:
         out_tokens = [np.asarray(tok[:, 0])]
         t0 = time.time()
         for t in range(args.tokens - 1):
-            pos = jnp.full((args.batch,), args.prompt_len + t, jnp.int32)
-            inp = tok_emb if cfg.frontend else tok
-            nxt, step_logits, cache = decode_step(params, cache, inp, pos,
-                                                  cfg=cfg)
-            if ds is not None:
-                # demo-grade retrieval key: context-free hidden state of
-                # the last token (the retrieval_decode example shows the
-                # full flow)
-                kp = knn_probs(ds, np.asarray(
-                    hidden_states(params, cfg, tok), np.float32)[:, -1],
-                    k=8, vocab_size=cfg.vocab_size, client=ds_client)
-                mixed = interpolate(np.asarray(step_logits), kp,
-                                    lam=args.lam)
-                nxt = jnp.asarray(mixed.argmax(-1), jnp.int32)
-            tok = nxt[:, None]
-            out_tokens.append(np.asarray(nxt))
+            with span("serve.decode_step", step=t):
+                pos = jnp.full((args.batch,), args.prompt_len + t,
+                               jnp.int32)
+                inp = tok_emb if cfg.frontend else tok
+                nxt, step_logits, cache = decode_step(params, cache, inp,
+                                                      pos, cfg=cfg)
+                if ds is not None:
+                    # demo-grade retrieval key: context-free hidden
+                    # state of the last token (the retrieval_decode
+                    # example shows the full flow)
+                    kp = knn_probs(ds, np.asarray(
+                        hidden_states(params, cfg, tok),
+                        np.float32)[:, -1], k=8,
+                        vocab_size=cfg.vocab_size, client=ds_client)
+                    mixed = interpolate(np.asarray(step_logits), kp,
+                                        lam=args.lam)
+                    nxt = jnp.asarray(mixed.argmax(-1), jnp.int32)
+                tok = nxt[:, None]
+                out_tokens.append(np.asarray(nxt))
         dt = time.time() - t0
     gen = np.stack(out_tokens, axis=1)
-    print(f"[serve] decoded {args.tokens} tokens/seq in {dt:.2f}s "
-          f"({args.batch*args.tokens/dt:.1f} tok/s)")
-    print(f"[serve] generated ids (row 0): {gen[0][:16]}")
+    log.info("[serve] decoded %d tokens/seq in %.2fs (%.1f tok/s)",
+             args.tokens, dt, args.batch * args.tokens / dt)
+    log.info("[serve] generated ids (row 0): %s", gen[0][:16])
+    if tracer is not None:
+        payload = tracer.write_chrome(args.trace_out)
+        log.info("[serve] wrote %d trace events to %s",
+                 len(payload["traceEvents"]), args.trace_out)
+    if server is not None:
+        server.stop()
 
 
 if __name__ == "__main__":

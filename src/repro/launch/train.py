@@ -14,9 +14,12 @@ import jax.numpy as jnp
 from repro.common.registry import get_arch, list_archs
 from repro.data.synthetic import SyntheticLM
 from repro.launch.mesh import make_local_mesh, make_production_mesh
+from repro.obs import get_logger
 from repro.train.checkpoint import save_checkpoint
 from repro.train.optimizer import AdamWConfig
 from repro.train.train_step import init_sharded, make_train_step
+
+log = get_logger(__name__)
 
 
 def main() -> None:
@@ -52,13 +55,13 @@ def main() -> None:
                  "mask": jnp.asarray(b.mask)}
         params, opt_state, m = step_fn(params, opt_state, batch)
         if i % 10 == 0 or i == args.steps - 1:
-            print(f"[train:{cfg.name}] step {i:4d} "
+            log.info(f"[train:{cfg.name}] step {i:4d} "
                   f"loss={float(m['loss']):.4f} lr={float(m['lr']):.2e} "
                   f"({(time.time()-t0)/(i+1):.2f}s/step)")
     if args.ckpt:
         save_checkpoint(args.ckpt, params, opt_state, step=args.steps,
                         meta={"arch": cfg.name})
-        print(f"saved checkpoint to {args.ckpt}")
+        log.info(f"saved checkpoint to {args.ckpt}")
 
 
 if __name__ == "__main__":

@@ -64,6 +64,7 @@ from repro.core.meta_index import PyramidIndex
 from repro.core.quant import exact_rerank_np
 from repro.core.router import effective_ef, route_queries
 from repro.kernels.merge_topk import merge_topk_np
+from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.serving.faults import FaultSchedule
 
 logger = logging.getLogger(__name__)
@@ -84,6 +85,7 @@ class QueryRequest:
     submitted_at: float = 0.0  # for topic copies: this dispatch's enqueue time
     shard: int = -1           # which topic this copy was enqueued to
     attempt: int = 0          # 0 = primary dispatch, >0 = hedge/redispatch
+    span_id: Optional[int] = None   # the query's root trace span, if any
 
 
 @dataclasses.dataclass
@@ -94,6 +96,10 @@ class PartialResult:
     shard: int = -1
     attempt: int = 0
     enqueued_at: float = 0.0  # dispatch time of the request copy served
+    # the two latency views of this partial (they differ under queueing,
+    # throttling, and hedging — conflating them was the old skew bug):
+    service_s: float = 0.0    # executor-side: batch drain -> results posted
+    e2e_s: float = 0.0        # merger-side: dispatch enqueue -> merge arrival
 
 
 @dataclasses.dataclass
@@ -115,6 +121,7 @@ class _Pending:
     dispatched: Dict[int, float]          # shard -> last dispatch time
     attempts: Dict[int, int]              # shard -> dispatch count
     hedges: int = 0
+    span: object = None                   # open root trace span (or None)
 
 
 class LatencyTracker:
@@ -160,7 +167,8 @@ class Executor(threading.Thread):
                  result_bus: "queue.Queue", heartbeat: Dict[str, float],
                  batch_max: int = 32, warm_k: int = 10,
                  fault_tick=None, redispatch=None, k_factor: int = 1,
-                 linger_s: float = 0.0, net_delay_s: float = 0.0):
+                 linger_s: float = 0.0, net_delay_s: float = 0.0,
+                 tracer=NULL_TRACER):
         super().__init__(name=name, daemon=True)
         self.topic = topic
         self.shard_id = shard_id
@@ -199,6 +207,7 @@ class Executor(threading.Thread):
         # shrinks the fetch budget), which is exactly what makes it
         # hideable by a client that overlaps retrieval with decode.
         self.net_delay_s = net_delay_s
+        self.tracer = tracer
         self.cpu_share = 1.0        # straggler injection: <1 adds sleep
         self.alive = True
         self.warmed = False         # past jit warmup (monitor grace gate)
@@ -260,9 +269,11 @@ class Executor(threading.Thread):
         if len(batch) < self.batch_max:  # pad to the compiled shape
             pad = np.repeat(vecs[:1], self.batch_max - len(batch), axis=0)
             vecs = np.concatenate([vecs, pad], axis=0)
-        ids, scores = H.hnsw_search(
-            self.graph, jnp.asarray(vecs), metric=self.metric,
-            k=k, ef=max(self.ef, k))
+        with self.tracer.span("kernel.beam_walk", shard=self.shard_id,
+                              k=k, batch=len(batch)):
+            ids, scores = H.hnsw_search(
+                self.graph, jnp.asarray(vecs), metric=self.metric,
+                k=k, ef=max(self.ef, k))
         ids = np.asarray(ids)
         scores = np.asarray(scores)
         return [(ids[i, : r.k * self.k_factor],
@@ -327,31 +338,38 @@ class Executor(threading.Thread):
                     self.fault_tick(self.name)   # drain boundary: a kill
                 if not self.alive:      # event lands mid-batch, items
                     return              # in hand (finally re-enqueues)
-                t0 = time.monotonic()
-                # a thread blocked in XLA cannot heartbeat: flag the
-                # window so the monitor judges it on search_grace_s,
-                # not the loop-idle timeout
-                self.heartbeat[self.name] = t0
-                self.busy_since = t0
-                outs = self._search(batch)
-                # refresh the beat BEFORE dropping the busy flag: the
-                # instant busy_since clears, the monitor judges us on
-                # the short idle timeout again, and the pre-search
-                # heartbeat may already be older than that
-                self.heartbeat[self.name] = time.monotonic()
-                self.busy_since = 0.0
-                if self.cpu_share < 1.0:
-                    self._throttle(time.monotonic() - t0)
-                if self.net_delay_s > 0.0:   # emulated RPC round-trip:
-                    self._sleep(self.net_delay_s)   # no CPU consumed
-                if not self.alive:      # killed during search/throttle:
-                    return              # a dead machine returns nothing
-                for r, (ids_r, scores_r) in zip(batch, outs):
-                    self.result_bus.put(PartialResult(
-                        r.query_id, ids_r, scores_r, shard=self.shard_id,
-                        attempt=r.attempt, enqueued_at=r.submitted_at))
-                self.processed += len(batch)
-                self._set_inflight([])
+                with self.tracer.span(
+                        "executor.batch", executor=self.name,
+                        shard=self.shard_id, n=len(batch),
+                        queries=[r.query_id for r in batch]):
+                    t0 = time.monotonic()
+                    # a thread blocked in XLA cannot heartbeat: flag the
+                    # window so the monitor judges it on search_grace_s,
+                    # not the loop-idle timeout
+                    self.heartbeat[self.name] = t0
+                    self.busy_since = t0
+                    outs = self._search(batch)
+                    # refresh the beat BEFORE dropping the busy flag: the
+                    # instant busy_since clears, the monitor judges us on
+                    # the short idle timeout again, and the pre-search
+                    # heartbeat may already be older than that
+                    self.heartbeat[self.name] = time.monotonic()
+                    self.busy_since = 0.0
+                    if self.cpu_share < 1.0:
+                        self._throttle(time.monotonic() - t0)
+                    if self.net_delay_s > 0.0:  # emulated RPC round-trip:
+                        self._sleep(self.net_delay_s)  # no CPU consumed
+                    if not self.alive:  # killed during search/throttle:
+                        return          # a dead machine returns nothing
+                    service_s = time.monotonic() - t0
+                    for r, (ids_r, scores_r) in zip(batch, outs):
+                        self.result_bus.put(PartialResult(
+                            r.query_id, ids_r, scores_r,
+                            shard=self.shard_id, attempt=r.attempt,
+                            enqueued_at=r.submitted_at,
+                            service_s=service_s))
+                    self.processed += len(batch)
+                    self._set_inflight([])
         finally:
             # crash, kill, or normal exit: nothing may die holding work.
             # Route through the engine's redispatch so the bookkeeping
@@ -397,7 +415,6 @@ class Monitor(threading.Thread):
         # max_restarts bounds crash *loops*, not lifetime failures
         self.restart_reset_s = restart_reset_s
         self.running = True
-        self.restarts = 0
         self._timeline: collections.deque = collections.deque(
             maxlen=timeline_cap)
         self._timeline_lock = threading.Lock()
@@ -406,6 +423,13 @@ class Monitor(threading.Thread):
         self._last_restart: Dict[str, float] = {}
         self._gave_up: Dict[str, bool] = {}
         self._suspected: set = set()
+
+    @property
+    def restarts(self) -> int:
+        """Respawns actually performed. Counter-backed: the Prometheus
+        ``pyramid_executor_restarts_total`` series IS the bookkeeping
+        (reads 0 under a disabled registry, like all migrated stats)."""
+        return int(self.engine._m_restarts.value)
 
     def _record(self, name: str, event: str, detail: str) -> None:
         with self._timeline_lock:
@@ -461,37 +485,51 @@ class Monitor(threading.Thread):
                         self._next_allowed.pop(name, None)
                         self._gave_up.pop(name, None)
                     continue
-                # supervisor step 1: a dead executor's drained batch must
-                # not be lost — re-enqueue whatever it still held (the
-                # executor's own finally-requeue races us; take_inflight
-                # is an atomic pop, so items go back exactly once)
-                n = self.engine._redispatch_inflight(ex)
-                if n:
-                    self._record(name, "redispatch",
-                                 f"re-enqueued {n} in-flight items")
-                # supervisor step 2: respawn, bounded with backoff
-                if not self.engine.auto_restart:
-                    continue
-                if now < self._next_allowed.get(name, 0.0):
-                    continue
-                count = self._restart_counts.get(name, 0)
-                if count >= self.max_restarts:
-                    if not self._gave_up.get(name):
-                        self._gave_up[name] = True
-                        self._record(name, "gave_up",
-                                     f"max_restarts={self.max_restarts} "
-                                     "exhausted")
-                    continue
-                if self.engine.restart_executor(name):
-                    self.restarts += 1
-                    self._restart_counts[name] = count + 1
-                    self._last_restart[name] = now
-                    backoff = min(self.backoff_cap_s,
-                                  self.backoff_base_s * (2 ** count))
-                    self._next_allowed[name] = now + backoff
-                    self._record(name, "restart",
-                                 f"attempt {count + 1}/{self.max_restarts},"
-                                 f" next backoff {backoff:.2f}s")
+                with self.engine.tracer.span("monitor.recover",
+                                             executor=name):
+                    self._recover(name, ex, now)
+
+    def _recover(self, name: str, ex: Executor, now: float) -> None:
+        """One supervision action for a dead executor: re-enqueue its
+        in-flight work, then (maybe) respawn it. Runs inside a
+        ``monitor.recover`` span; the redispatch and respawn instants it
+        emits nest under that span, so a trace shows exactly which
+        recovery handled which death."""
+        # supervisor step 1: a dead executor's drained batch must
+        # not be lost — re-enqueue whatever it still held (the
+        # executor's own finally-requeue races us; take_inflight
+        # is an atomic pop, so items go back exactly once)
+        n = self.engine._redispatch_inflight(ex)
+        if n:
+            self._record(name, "redispatch",
+                         f"re-enqueued {n} in-flight items")
+            self.engine.tracer.instant("monitor.redispatch",
+                                       executor=name, items=n)
+        # supervisor step 2: respawn, bounded with backoff
+        if not self.engine.auto_restart:
+            return
+        if now < self._next_allowed.get(name, 0.0):
+            return
+        count = self._restart_counts.get(name, 0)
+        if count >= self.max_restarts:
+            if not self._gave_up.get(name):
+                self._gave_up[name] = True
+                self._record(name, "gave_up",
+                             f"max_restarts={self.max_restarts} "
+                             "exhausted")
+            return
+        if self.engine.restart_executor(name):
+            self.engine._m_restarts.inc()
+            self._restart_counts[name] = count + 1
+            self._last_restart[name] = now
+            backoff = min(self.backoff_cap_s,
+                          self.backoff_base_s * (2 ** count))
+            self._next_allowed[name] = now + backoff
+            self._record(name, "restart",
+                         f"attempt {count + 1}/{self.max_restarts},"
+                         f" next backoff {backoff:.2f}s")
+            self.engine.tracer.instant("executor.respawn", executor=name,
+                                       attempt=count + 1)
 
 
 class ServingEngine:
@@ -511,7 +549,9 @@ class ServingEngine:
                  hedge_cold_s: float = 1.0,
                  hedge_max_attempts: int = 2,
                  fault_schedule: Optional[FaultSchedule] = None,
-                 monitor_opts: Optional[dict] = None):
+                 monitor_opts: Optional[dict] = None,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
         self.index = index
         self.cfg = index.config
         self.metric = "ip" if self.cfg.is_mips else self.cfg.metric
@@ -528,7 +568,6 @@ class ServingEngine:
         # forever (its partials can never arrive); after this deadline it
         # is failed with QueryExpiredError. None disables expiry.
         self.pending_deadline_s = pending_deadline_s
-        self.expired = 0
         # quantized serving: executors search the int8 arena and return
         # rerank_factor * k candidates per shard; the merger exact-
         # reranks the merged list against the host-side float32 table
@@ -546,10 +585,77 @@ class ServingEngine:
         self.hedge_min_s = hedge_min_s
         self.hedge_cold_s = hedge_cold_s
         self.hedge_max_attempts = hedge_max_attempts
-        self.hedged_queries = 0    # queries hedged at least once
-        self.redispatched = 0      # total re-enqueues (hedge + recovery)
+        # hedging keeps its exact-percentile window (the deadline needs
+        # an exact p99 over recent samples, which fixed-bucket histogram
+        # quantiles cannot give); the registry histograms below are fed
+        # at the same merge-loop site for exposition
         self.tracker = LatencyTracker()
         self.faults = fault_schedule
+        # -- observability: the registry counters ARE the engine's
+        # bookkeeping (stats() reads them back, so the Prometheus
+        # endpoint and stats() can never disagree). Default is a fresh
+        # private registry so per-engine stats stay per-engine; pass a
+        # shared one to aggregate (Brokers.replace_index hands the old
+        # engine's registry to its replacement so counters stay
+        # monotonic across hot-swaps — registration is idempotent).
+        # Caveat: under a disabled registry the migrated stats counters
+        # read 0 (that is the documented cost of "free when off").
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        m = self.obs
+        self._m_submitted = m.counter(
+            "pyramid_queries_submitted_total",
+            "queries accepted by submit()")
+        self._m_expired = m.counter(
+            "pyramid_queries_expired_total",
+            "pending queries failed by the expiry sweep")
+        self._m_hedged = m.counter(
+            "pyramid_queries_hedged_total",
+            "queries hedged at least once")
+        self._m_redispatched = m.counter(
+            "pyramid_redispatched_total",
+            "shard-work re-enqueues (hedge + recovery)")
+        self._m_restarts = m.counter(
+            "pyramid_executor_restarts_total",
+            "executor respawns performed by the monitor")
+        self._m_partials = m.counter(
+            "pyramid_partials_total",
+            "winning partial results merged", labelnames=("shard",))
+        self._h_service = m.histogram(
+            "pyramid_shard_service_seconds",
+            "executor-side batch service time (drain -> results posted)",
+            labelnames=("shard",))
+        self._h_e2e = m.histogram(
+            "pyramid_shard_e2e_seconds",
+            "dispatch-to-merge latency per winning partial "
+            "(what hedge deadlines are derived from)",
+            labelnames=("shard",))
+        self._h_query = m.histogram(
+            "pyramid_query_latency_seconds",
+            "submit-to-resolve latency per completed query")
+        # pre-bound per-shard children: the merge loop is the hot path
+        shards = [str(s) for s in range(self.w)]
+        self._m_partials_by = [self._m_partials.labels(shard=s)
+                               for s in shards]
+        self._h_service_by = [self._h_service.labels(shard=s)
+                              for s in shards]
+        self._h_e2e_by = [self._h_e2e.labels(shard=s) for s in shards]
+        # lazy gauges: evaluated at scrape time, no poller thread
+        m.gauge("pyramid_pending_queries", "in-flight queries",
+                fn=lambda: len(self._pending))
+        m.gauge("pyramid_queue_depth", "topic queue depth",
+                labelnames=("shard",),
+                fn=lambda: {(str(s),): self.topics[s].qsize()
+                            for s in range(self.w)})
+        m.gauge("pyramid_replicas_live", "live replicas per shard",
+                labelnames=("shard",),
+                fn=lambda: {(str(s),): self.replica_count(s)
+                            for s in range(self.w)})
+        m.gauge("pyramid_executor_heartbeat_staleness_seconds",
+                "seconds since each executor's last heartbeat",
+                labelnames=("executor",),
+                fn=lambda: {(name,): time.monotonic() - hb
+                            for name, hb in list(self.heartbeat.items())})
         # maintenance observability: a background compactor
         # (repro.store.maintenance) registers a stats provider here and
         # hooks into the batch-drain tick — same deterministic step
@@ -575,6 +681,9 @@ class ServingEngine:
         # reports both so the raise is observable.
         self._routed_hits = 0
         self._routed_queries = 0
+        # per-shard dispatch counts: stats()['access_rate_per_shard'] is
+        # the load signal the autoscaler reads (hot shards get replicas)
+        self._routed_per_shard = np.zeros(self.w, np.int64)
         self._routing_kb = self.cfg.branching_factor
 
         self.topics: List[queue.Queue] = [queue.Queue()
@@ -633,7 +742,8 @@ class ServingEngine:
                       redispatch=self._redispatch_inflight,
                       k_factor=self.rerank_factor,
                       linger_s=self.linger_s,
-                      net_delay_s=self.net_delay_s)
+                      net_delay_s=self.net_delay_s,
+                      tracer=self.tracer)
         # seed the heartbeat BEFORE the thread runs: an executor that
         # dies or hangs before its first beat must look stale, not
         # fresh-forever (the old ``heartbeat.get(name, now)`` bug)
@@ -770,7 +880,10 @@ class ServingEngine:
                     r += 1
                 used.add(r)
                 self._spawn(shard, r)
-            return self._live_replicas(shard)
+            live_after = self._live_replicas(shard)
+            self.tracer.instant("engine.scale", shard=shard,
+                                replicas=len(live_after))
+            return live_after
 
     def drain(self, timeout: float = 30.0) -> bool:
         """Wait until every in-flight future has resolved; returns
@@ -796,12 +909,14 @@ class ServingEngine:
         ``engine.executors`` / ``engine._pending`` internals."""
         with self._lock:
             pending = len(self._pending)
-            submitted = self._qid
-            hedged = self.hedged_queries
-            redispatched = self.redispatched
             routed_hits = self._routed_hits
             routed_queries = self._routed_queries
+            routed_per_shard = self._routed_per_shard.copy()
             routing_kb = self._routing_kb
+        # counter-backed (same objects the Prometheus endpoint renders,
+        # so /metrics and stats() can never disagree)
+        hedged = int(self._m_hedged.value)
+        redispatched = int(self._m_redispatched.value)
         execs = {
             name: {"shard": ex.shard_id, "alive": ex.alive,
                    "processed": ex.processed, "cpu_share": ex.cpu_share}
@@ -815,6 +930,11 @@ class ServingEngine:
             # submitted query touched (nan before any submit)
             "access_rate": (routed_hits / (routed_queries * self.w)
                             if routed_queries else float("nan")),
+            # per-shard dispatch fraction (hot-shard signal for the
+            # autoscaler): shard s appeared in this fraction of routes
+            "access_rate_per_shard": (
+                (routed_per_shard / routed_queries).tolist()
+                if routed_queries else [float("nan")] * self.w),
             # what the last submit's meta routing actually searched
             # with: the engine requests a _ROUTING_EF-wide beam and the
             # router raises it to K when K is larger — requested !=
@@ -826,8 +946,12 @@ class ServingEngine:
             "replicas": {s: self.replica_count(s) for s in range(self.w)},
             "executors": execs,
             "pending_queries": pending,
-            "submitted_queries": submitted,
-            "expired_queries": self.expired,
+            # counter-backed like hedged/expired below: cumulative over
+            # the registry's lifetime, so a hot-swapped engine that
+            # inherited its predecessor's registry reports the
+            # service-level total and /metrics parity holds exactly
+            "submitted_queries": int(self._m_submitted.value),
+            "expired_queries": int(self._m_expired.value),
             "hedged_queries": hedged,
             "redispatched": redispatched,
             "restarts": self.monitor.restarts,
@@ -853,6 +977,9 @@ class ServingEngine:
         for ex in list(self.executors.values()):   # snapshot: the monitor
             ex.kill()                              # may _spawn concurrently
         for entry in pending:   # fail in-flight futures loudly
+            if entry.req.span_id is not None:
+                entry.span.attrs.update(shutdown=True)
+                self.tracer.end(entry.span)
             entry.fut.set_exception(EngineShutdownError(
                 f"engine shut down with query {entry.req.query_id} "
                 "in flight"))
@@ -885,10 +1012,12 @@ class ServingEngine:
             raise EngineShutdownError("engine is shut down")
         q = M.preprocess_queries(vectors, self.cfg.metric)
         kb = branching_factor or self.cfg.branching_factor
-        mask, _ = route_queries(
-            self.meta_arrays, self.part_of_center, jnp.asarray(q),
-            metric=self.metric, branching_factor=kb, num_shards=self.w,
-            ef=_ROUTING_EF)
+        with self.tracer.span("coordinator.route", n=int(q.shape[0]),
+                              branching_factor=kb):
+            mask, _ = route_queries(
+                self.meta_arrays, self.part_of_center, jnp.asarray(q),
+                metric=self.metric, branching_factor=kb,
+                num_shards=self.w, ef=_ROUTING_EF)
         mask = np.asarray(mask)
         futures = []
         now = time.monotonic()
@@ -900,12 +1029,13 @@ class ServingEngine:
             # plus the K this batch's meta routing actually used
             self._routed_hits += int(mask.sum())
             self._routed_queries += int(mask.shape[0])
+            self._routed_per_shard += mask.sum(axis=0).astype(np.int64)
             self._routing_kb = kb
             for i in range(q.shape[0]):
                 qid = self._qid
                 self._qid += 1
+                self._m_submitted.inc()
                 topics = tuple(int(s) for s in np.where(mask[i])[0])
-                req = QueryRequest(qid, q[i], k, len(topics), now)
                 fut = SearchFuture(qid)
                 if not topics:   # router selected nothing: empty result
                     fut.set_result(QueryResult(
@@ -913,11 +1043,20 @@ class ServingEngine:
                         np.empty(0, np.float32), 0.0))
                     futures.append(fut)
                     continue
+                # the query's root span stays open until the future
+                # resolves (merge, expiry, or shutdown); every dispatch,
+                # hedge, merge, and rerank span hangs off it
+                qspan = self.tracer.start("query", qid=qid, k=k,
+                                          shards=list(topics))
+                req = QueryRequest(qid, q[i], k, len(topics), now,
+                                   span_id=qspan.span_id)
                 self._pending[qid] = _Pending(
                     req=req, fut=fut, expected=topics, parts={},
                     dispatched={s: now for s in topics},
-                    attempts={s: 1 for s in topics})
+                    attempts={s: 1 for s in topics}, span=qspan)
                 for s in topics:
+                    self.tracer.instant("dispatch", parent=qspan.span_id,
+                                        qid=qid, shard=s, attempt=0)
                     self.topics[s].put(
                         dataclasses.replace(req, shard=s))
                 futures.append(fut)
@@ -943,11 +1082,16 @@ class ServingEngine:
                 entry.attempts[r.shard] = (
                     entry.attempts.get(r.shard, 1) + 1)
                 entry.dispatched[r.shard] = now
-                self.redispatched += 1
+                self._m_redispatched.inc()
                 requeue.append(dataclasses.replace(
                     r, attempt=entry.attempts[r.shard] - 1,
                     submitted_at=now))
         for r in requeue:
+            # child of the query's root span: the trace shows which
+            # query lost which shard-work to the dead executor
+            self.tracer.instant("recovery.redispatch", parent=r.span_id,
+                                qid=r.query_id, shard=r.shard,
+                                attempt=r.attempt, executor=ex.name)
             self.topics[r.shard].put(r)
         return len(requeue)
 
@@ -989,14 +1133,19 @@ class ServingEngine:
                     entry.attempts[s] = attempts + 1
                     entry.dispatched[s] = now
                     if entry.hedges == 0:
-                        self.hedged_queries += 1
+                        self._m_hedged.inc()
                     entry.hedges += 1
                     entry.fut.record_hedge()
-                    self.redispatched += 1
+                    self._m_redispatched.inc()
                     actions.append(dataclasses.replace(
                         entry.req, shard=s, attempt=attempts,
                         submitted_at=now))
         for r in actions:
+            # child of the query's root span even though the merger
+            # thread emits it — the acceptance-tested causality edge
+            self.tracer.instant("hedge.redispatch", parent=r.span_id,
+                                qid=r.query_id, shard=r.shard,
+                                attempt=r.attempt)
             self.topics[r.shard].put(r)
 
     # -- merge -------------------------------------------------------------
@@ -1029,14 +1178,22 @@ class ServingEngine:
                     # first result won, drop this one
                     continue
                 entry.parts[part.shard] = part
-                # per-shard service latency feeds the hedge deadline —
+                self._m_partials_by[part.shard].inc()
+                # per-shard e2e latency feeds the hedge deadline —
                 # WINNING partials only: a persistent straggler's losing
                 # deliveries would otherwise drag the tracked p99 up to
                 # its own latency and self-disable the hedging aimed at
-                # it (tracker has its own lock; never takes this one)
+                # it (tracker has its own lock; never takes this one).
+                # e2e (dispatch enqueue -> here) and service (executor
+                # drain -> post) are recorded separately on the partial:
+                # the hedge threshold and the histograms now measure the
+                # same explicitly-named thing instead of a mix
                 if part.enqueued_at > 0:
-                    self.tracker.observe(part.shard,
-                                         now - part.enqueued_at)
+                    part.e2e_s = now - part.enqueued_at
+                    self.tracker.observe(part.shard, part.e2e_s)
+                    self._h_e2e_by[part.shard].observe(part.e2e_s)
+                if part.service_s > 0:
+                    self._h_service_by[part.shard].observe(part.service_s)
                 if len(entry.parts) < len(entry.expected):
                     continue
                 del self._pending[part.query_id]
@@ -1047,28 +1204,40 @@ class ServingEngine:
             # merges the wider rerank_factor * k candidate list, then
             # exact-reranks it against the float32 table so the caller
             # sees full-precision scores and float-path recall.
-            parts = [entry.parts[s] for s in sorted(entry.parts)]
-            ids = np.concatenate([p.ids for p in parts])[None, :]
-            scores = np.concatenate([p.scores for p in parts])[None, :]
-            top_scores, top_ids = merge_topk_np(
-                scores, ids, k=entry.req.k * self.rerank_factor)
-            if self.quantize:
-                table_ids, table_vecs = self._rerank_table
-                top_ids, top_scores = exact_rerank_np(
-                    entry.req.vector[None, :], top_ids, entry.req.k,
-                    table_ids=table_ids, table_vecs=table_vecs,
-                    metric=self.metric)
-            found = top_ids[0] >= 0
-            tomb = self._tombstones
-            if tomb.size:
-                # serving-layer delete filter: the arena still holds a
-                # removed item's row until the next maintenance
-                # hot-swap, but its id must never reach a caller
-                found &= ~np.isin(top_ids[0], tomb)
+            qsid = entry.req.span_id
+            with self.tracer.span("merge", parent=qsid,
+                                  qid=entry.req.query_id,
+                                  parts=len(entry.parts)):
+                parts = [entry.parts[s] for s in sorted(entry.parts)]
+                ids = np.concatenate([p.ids for p in parts])[None, :]
+                scores = np.concatenate(
+                    [p.scores for p in parts])[None, :]
+                top_scores, top_ids = merge_topk_np(
+                    scores, ids, k=entry.req.k * self.rerank_factor)
+                if self.quantize:
+                    with self.tracer.span("rerank",
+                                          qid=entry.req.query_id):
+                        table_ids, table_vecs = self._rerank_table
+                        top_ids, top_scores = exact_rerank_np(
+                            entry.req.vector[None, :], top_ids,
+                            entry.req.k, table_ids=table_ids,
+                            table_vecs=table_vecs, metric=self.metric)
+                found = top_ids[0] >= 0
+                tomb = self._tombstones
+                if tomb.size:
+                    # serving-layer delete filter: the arena still holds
+                    # a removed item's row until the next maintenance
+                    # hot-swap, but its id must never reach a caller
+                    found &= ~np.isin(top_ids[0], tomb)
+            latency_s = time.monotonic() - entry.req.submitted_at
+            self._h_query.observe(latency_s)
+            if qsid is not None:   # None = null span (tracing off)
+                entry.span.attrs.update(hedges=entry.hedges,
+                                        latency_s=round(latency_s, 6))
+                self.tracer.end(entry.span)   # resolve closes the root
             entry.fut.set_result(QueryResult(
                 entry.req.query_id, top_ids[0][found],
-                top_scores[0][found],
-                time.monotonic() - entry.req.submitted_at,
+                top_scores[0][found], latency_s,
                 hedges=entry.hedges))
 
     def _expire_pending(self, now: float) -> None:
@@ -1081,7 +1250,10 @@ class ServingEngine:
                     del self._pending[qid]
                     expired.append(entry)
         for entry in expired:
-            self.expired += 1
+            self._m_expired.inc()
+            if entry.req.span_id is not None:
+                entry.span.attrs.update(expired=True)
+                self.tracer.end(entry.span)
             entry.fut.set_exception(QueryExpiredError(
                 f"query {entry.req.query_id} expired after "
                 f"{self.pending_deadline_s}s with "

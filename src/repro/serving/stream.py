@@ -59,6 +59,7 @@ import numpy as np
 from repro.common.config import ArchConfig
 from repro.common.utils import nearest_rank
 from repro.core.client import PyramidClient, gather_arrays
+from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.models.transformer import forward, grow_cache, make_cache
 from repro.serving.batcher import Completion, Request, scatter_slot
 from repro.serving.retrieval import (Datastore, interpolate,
@@ -183,7 +184,9 @@ class StreamEngine:
                  sampler: SamplerConfig = SamplerConfig(greedy=True),
                  seed: int = 0, overlap: bool = True,
                  max_queue: int = 64, retrieval_timeout_s: float = 30.0,
-                 stats_window: int = 4096, **engine_kw):
+                 stats_window: int = 4096,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None, **engine_kw):
         if datastore is None and client is not None:
             raise ValueError("client= needs the datastore= it serves")
         self.params = params
@@ -199,9 +202,18 @@ class StreamEngine:
         self.max_queue = max_queue
         self.retrieval_timeout_s = retrieval_timeout_s
 
+        # shared observability plane: the owned datastore client's
+        # serving engine joins this registry/tracer (unless engine_kw
+        # overrides), so one scrape / one trace covers decode steps AND
+        # the shard searches they fan out to
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+
         self._owns_client = False
         self._client = client
         if datastore is not None and client is None:
+            engine_kw.setdefault("registry", self.obs)
+            engine_kw.setdefault("tracer", self.tracer)
             self._client = open_datastore_client(datastore, **engine_kw)
             self._owns_client = True
         elif engine_kw:
@@ -221,14 +233,41 @@ class StreamEngine:
         self.done: List[Completion] = []
         self._closed = False
         self._t0: Optional[float] = None
-        self._steps = 0
-        self._tokens = 0
-        self._admitted = 0
-        self._rejected = 0
-        self._lookups = 0
-        self._knn_hits = 0
-        self._knn_tokens = 0
-        self._hedges = 0
+        # counter-backed bookkeeping (same objects /metrics renders, so
+        # the Prometheus endpoint and stats() can never disagree); the
+        # deques stay for exact windowed percentiles
+        m = self.obs
+        self._m_steps = m.counter(
+            "pyramid_stream_steps_total", "decode steps dispatched")
+        self._m_tokens = m.counter(
+            "pyramid_stream_tokens_total", "tokens emitted")
+        self._m_admitted = m.counter(
+            "pyramid_stream_admitted_total", "sessions admitted to slots")
+        self._m_rejected = m.counter(
+            "pyramid_stream_rejected_total",
+            "sessions refused by backpressure")
+        self._m_lookups = m.counter(
+            "pyramid_stream_lookups_total", "kNN lookups resolved")
+        self._m_knn_hits = m.counter(
+            "pyramid_stream_knn_hits_total",
+            "tokens whose retrieved memories contained them")
+        self._m_knn_tokens = m.counter(
+            "pyramid_stream_knn_tokens_total",
+            "tokens scored against retrieved memories")
+        self._m_hedges = m.counter(
+            "pyramid_stream_hedges_total",
+            "hedge re-dispatches observed on resolved lookups")
+        self._h_ret_wait = m.histogram(
+            "pyramid_stream_retrieval_wait_seconds",
+            "sampler block time per resolve (non-overlapped remainder)")
+        self._h_ret_lat = m.histogram(
+            "pyramid_stream_retrieval_latency_seconds",
+            "lookup submit-to-resolve latency")
+        m.gauge("pyramid_stream_queued_sessions", "admission queue depth",
+                fn=lambda: len(self.queue))
+        m.gauge("pyramid_stream_active_sessions", "occupied decode slots",
+                fn=lambda: sum(s is not None for grp in self.groups
+                               for s in grp.sessions))
         self._ret_wait = collections.deque(maxlen=stats_window)
         self._ret_lat = collections.deque(maxlen=stats_window)
 
@@ -264,9 +303,12 @@ class StreamEngine:
         if len(prompt) >= self.max_seq:
             raise ValueError(
                 f"prompt length {len(prompt)} >= max_seq {self.max_seq}")
-        toks = jnp.asarray(prompt[None, :], jnp.int32)
-        hid, _, pcache = forward(self.params, self.cfg, toks,
-                                 build_cache=True, skip_head=True)
+        with self.tracer.span("stream.prefill",
+                              request_id=request.request_id,
+                              prompt_len=len(prompt)):
+            toks = jnp.asarray(prompt[None, :], jnp.int32)
+            hid, _, pcache = forward(self.params, self.cfg, toks,
+                                     build_cache=True, skip_head=True)
         pcache = grow_cache(pcache, self.max_seq,
                             window=self.cfg.sliding_window)
         h = hid[:, -1].astype(jnp.float32)
@@ -288,7 +330,7 @@ class StreamEngine:
             raise ValueError(f"session {session.request_id} is "
                              f"{session.state}, expected 'prefilled'")
         if len(self.queue) >= self.max_queue:
-            self._rejected += 1
+            self._m_rejected.inc()
             raise BackpressureError(
                 f"admission queue full ({self.max_queue}); retry after "
                 "generate_step frees capacity")
@@ -322,13 +364,16 @@ class StreamEngine:
         if self._t0 is None:
             self._t0 = time.monotonic()
         g = self.groups[self._turn]
-        self._turn = 1 - self._turn
-        emitted: List[Tuple[int, int]] = []
-        self._finish(g, emitted)
-        self._admit(g, emitted)
-        self._dispatch(g)
-        if not self.overlap:
+        with self.tracer.span("stream.generate_step",
+                              group=self._turn) as step_span:
+            self._turn = 1 - self._turn
+            emitted: List[Tuple[int, int]] = []
             self._finish(g, emitted)
+            self._admit(g, emitted)
+            self._dispatch(g)
+            if not self.overlap:
+                self._finish(g, emitted)
+            step_span.set(emitted=len(emitted))
         return emitted
 
     def has_work(self) -> bool:
@@ -360,8 +405,9 @@ class StreamEngine:
         retrieved memories' values (the benchmark's recall-equivalent)."""
         vals = np.where(ids >= 0, self.datastore.values[
             np.where(ids >= 0, ids, 0)], -1)
-        self._knn_hits += int((vals == toks[:, None]).any(axis=1).sum())
-        self._knn_tokens += len(toks)
+        self._m_knn_hits.inc(
+            int((vals == toks[:, None]).any(axis=1).sum()))
+        self._m_knn_tokens.inc(len(toks))
 
     def _finish(self, g: _SlotGroup, emitted: List) -> None:
         inf = g.inflight
@@ -369,14 +415,18 @@ class StreamEngine:
             return
         g.inflight = None
         if inf.futures is not None:
-            t0 = time.monotonic()
-            ids, scores = gather_arrays(inf.futures, self.knn_k,
-                                        self.retrieval_timeout_s)
-            now = time.monotonic()
+            with self.tracer.span("stream.gather",
+                                  n=len(inf.futures)):
+                t0 = time.monotonic()
+                ids, scores = gather_arrays(inf.futures, self.knn_k,
+                                            self.retrieval_timeout_s)
+                now = time.monotonic()
             self._ret_wait.append(now - t0)
             self._ret_lat.append(now - inf.submitted_at)
-            self._lookups += len(inf.futures)
-            self._hedges += sum(f.hedges for f in inf.futures)
+            self._h_ret_wait.observe(now - t0)
+            self._h_ret_lat.observe(now - inf.submitted_at)
+            self._m_lookups.inc(len(inf.futures))
+            self._m_hedges.inc(sum(f.hedges for f in inf.futures))
             logp = self._knn_logprobs(inf.logits, ids, scores)
         else:
             logp = inf.logits
@@ -390,7 +440,7 @@ class StreamEngine:
             g.pos[slot] += 1
             g.last[slot] = tok
             emitted.append((sess.request_id, tok))
-            self._tokens += 1
+            self._m_tokens.inc()
             if self._finished(sess, int(g.pos[slot])):
                 self._complete(sess)
                 g.sessions[slot] = None
@@ -438,7 +488,7 @@ class StreamEngine:
                 sess = self.queue.popleft()
                 tok = self._first_token(sess)
                 emitted.append((sess.request_id, tok))
-                self._tokens += 1
+                self._m_tokens.inc()
                 pos = len(sess.request.prompt)
                 if self._finished(sess, pos):
                     self._complete(sess)   # done at token 1: the slot
@@ -449,7 +499,7 @@ class StreamEngine:
                 g.sessions[slot] = sess
                 g.pos[slot] = pos
                 g.last[slot] = tok
-                self._admitted += 1
+                self._m_admitted.inc()
                 budget -= 1
                 break
 
@@ -461,12 +511,13 @@ class StreamEngine:
                                         self.retrieval_timeout_s)
             now = time.monotonic()
             self._ret_wait.append(now - t0)
+            self._h_ret_wait.observe(now - t0)
             # no _ret_lat sample: this lookup was issued at insert() and
             # may have sat behind the admission queue for many steps —
             # that residency is queueing, not retrieval latency, and
             # would swamp the per-step p99
-            self._lookups += 1
-            self._hedges += sess.future.hedges
+            self._m_lookups.inc()
+            self._m_hedges.inc(sess.future.hedges)
             sess.future = None
             logp = self._knn_logprobs(sess.lm_logits[None], ids, scores)
         else:
@@ -483,23 +534,24 @@ class StreamEngine:
                 if g.sessions[s] is not None]
         if not live:
             return
-        tokens = jnp.asarray(g.last[:, None], jnp.int32)
-        pos = jnp.asarray(g.pos, jnp.int32)
-        logits_d, hidden_d, g.cache = self._decode(
-            self.params, g.cache, tokens, pos)
-        # blocking on the transfer IS the overlap window for the other
-        # group: while this group's decode finishes on device, the
-        # counter-group's lookups resolve in the engine's threads
-        logits = np.asarray(logits_d)[live]
-        hidden = np.asarray(hidden_d, np.float32)[live]
-        futures = None
-        submitted = time.monotonic()
-        if self._client is not None:
-            futures = self._client.search_batch(
-                hidden, self.knn_k,
-                branching_factor=self.branching_factor)
+        with self.tracer.span("stream.dispatch", n=len(live)):
+            tokens = jnp.asarray(g.last[:, None], jnp.int32)
+            pos = jnp.asarray(g.pos, jnp.int32)
+            logits_d, hidden_d, g.cache = self._decode(
+                self.params, g.cache, tokens, pos)
+            # blocking on the transfer IS the overlap window for the
+            # other group: while this group's decode finishes on device,
+            # the counter-group's lookups resolve in engine threads
+            logits = np.asarray(logits_d)[live]
+            hidden = np.asarray(hidden_d, np.float32)[live]
+            futures = None
+            submitted = time.monotonic()
+            if self._client is not None:
+                futures = self._client.search_batch(
+                    hidden, self.knn_k,
+                    branching_factor=self.branching_factor)
         g.inflight = _Inflight(logits, live, futures, submitted)
-        self._steps += 1
+        self._m_steps.inc()
 
     # -- observability -----------------------------------------------------
 
@@ -517,28 +569,31 @@ class StreamEngine:
         def pct(xs, q):
             return nearest_rank(xs, q) if xs else float("nan")
 
+        # counter-backed (the same objects /metrics renders)
+        tokens = int(self._m_tokens.value)
+        knn_tokens = int(self._m_knn_tokens.value)
         return {
             "num_slots": self.num_slots,
             "slots_per_group": self.slots_per_group,
             "overlap": self.overlap,
-            "steps": self._steps,
-            "tokens_emitted": self._tokens,
-            "tokens_per_s": (self._tokens / dt if dt and dt > 0
+            "steps": int(self._m_steps.value),
+            "tokens_emitted": tokens,
+            "tokens_per_s": (tokens / dt if dt and dt > 0
                              else float("nan")),
             "sessions": {"queued": len(self.queue), "active": active,
-                         "admitted": self._admitted,
+                         "admitted": int(self._m_admitted.value),
                          "completed": len(self.done),
-                         "rejected": self._rejected},
+                         "rejected": int(self._m_rejected.value)},
             "retrieval": {
                 "enabled": self._client is not None,
                 "knn_k": self.knn_k, "lam": self.lam,
-                "lookups": self._lookups,
-                "hedges": self._hedges,
+                "lookups": int(self._m_lookups.value),
+                "hedges": int(self._m_hedges.value),
                 "latency_p50_s": pct(lat, 50),
                 "latency_p99_s": pct(lat, 99),
                 "wait_p50_s": pct(wait, 50),
                 "wait_p99_s": pct(wait, 99),
-                "knn_hit_rate": (self._knn_hits / self._knn_tokens
-                                 if self._knn_tokens else float("nan")),
+                "knn_hit_rate": (int(self._m_knn_hits.value) / knn_tokens
+                                 if knn_tokens else float("nan")),
             },
         }

@@ -47,6 +47,7 @@ from typing import Callable, List, Optional
 import numpy as np
 
 from repro.core.meta_index import PyramidIndex
+from repro.obs import NULL_TRACER, MetricsRegistry
 from repro.store.store import IndexStore
 
 logger = logging.getLogger(__name__)
@@ -95,7 +96,9 @@ class Compactor:
                  gc_keep: Optional[int] = None,
                  catchup_rounds: int = 4,
                  fault_hook: Optional[Callable[[str], None]] = None,
-                 poll_s: float = 1.0):
+                 poll_s: float = 1.0,
+                 registry: Optional[MetricsRegistry] = None,
+                 tracer=None):
         self.store = store
         self.index = index
         self.brokers = brokers
@@ -124,13 +127,49 @@ class Compactor:
         self._running = False
         self._active = False    # a cycle is in flight (stats)
 
-        self.cycles = 0
-        self.folded_records = 0
-        self.truncated_records = 0
+        # counter-backed bookkeeping (pass the engine's registry — what
+        # Brokers.attach_maintenance does — and one /metrics scrape
+        # covers serving + maintenance; swap counts stay monotonic
+        # across the hot-swaps this very loop performs)
+        self.obs = registry if registry is not None else MetricsRegistry()
+        self.tracer = tracer if tracer is not None else NULL_TRACER
+        m = self.obs
+        self._m_cycles = m.counter(
+            "pyramid_maintenance_cycles_total",
+            "completed compaction cycles")
+        self._m_folded = m.counter(
+            "pyramid_maintenance_folded_records_total",
+            "delta-log records folded into published versions")
+        self._m_truncated = m.counter(
+            "pyramid_maintenance_truncated_records_total",
+            "delta-log records truncated after publish")
+        self._m_swaps = m.counter(
+            "pyramid_maintenance_swaps_total",
+            "serving-engine hot-swaps performed")
+        m.gauge("pyramid_maintenance_pending_records",
+                "records journaled since the last fold",
+                fn=lambda: self._since_fold)
         self.rebalance_ops: List[tuple] = []
         self.refreshes = 0
         self.last_version: Optional[str] = None
         self.last_error: Optional[str] = None
+
+    # counter-backed views (the Prometheus series are the bookkeeping)
+    @property
+    def cycles(self) -> int:
+        return int(self._m_cycles.value)
+
+    @property
+    def folded_records(self) -> int:
+        return int(self._m_folded.value)
+
+    @property
+    def truncated_records(self) -> int:
+        return int(self._m_truncated.value)
+
+    @property
+    def swaps(self) -> int:
+        return int(self._m_swaps.value)
 
     # -- write path ---------------------------------------------------------
 
@@ -304,61 +343,75 @@ class Compactor:
             raise ValueError(f"no published version under {store.root}")
         old_log = store.reader(old_vid).delta_log()
 
-        # 1. bulk fold from a snapshot — bounded by the count observed
-        # NOW so a record committing mid-replay stays in the tail
-        snapshot = len(old_log)
-        candidate = store.load(version=old_vid, replay_delta=False,
-                               attach_delta=False)
-        applied = self._apply(candidate, itertools.islice(
-            old_log.replay(), snapshot))
+        with self.tracer.span("compaction.cycle", version_from=old_vid,
+                              rebalance=bool(plan_op)) as cyc:
+            # 1. bulk fold from a snapshot — bounded by the count
+            # observed NOW so a record committing mid-replay stays in
+            # the tail
+            snapshot = len(old_log)
+            candidate = store.load(version=old_vid, replay_delta=False,
+                                   attach_delta=False)
+            with self.tracer.span("compaction.fold", records=snapshot):
+                applied = self._apply(candidate, itertools.islice(
+                    old_log.replay(), snapshot))
 
-        # 2. shard maintenance on the candidate (never the serving
-        # index): split/merge by skew, periodic centroid refresh
-        if plan_op is not None:
-            from repro.build.planner import merge_shards, split_shard
-            if plan_op[0] == "split":
-                split_shard(candidate, plan_op[1])
-            else:
-                merge_shards(candidate, plan_op[1], plan_op[2])
-            self.rebalance_ops.append(plan_op)
-        if refresh_due:
-            from repro.core.router import refresh_centroids
-            refresh_centroids(candidate)
-            self.refreshes += 1
+            # 2. shard maintenance on the candidate (never the serving
+            # index): split/merge by skew, periodic centroid refresh
+            if plan_op is not None:
+                from repro.build.planner import merge_shards, split_shard
+                with self.tracer.span("compaction.rebalance",
+                                      op=list(plan_op)):
+                    if plan_op[0] == "split":
+                        split_shard(candidate, plan_op[1])
+                    else:
+                        merge_shards(candidate, plan_op[1], plan_op[2])
+                self.rebalance_ops.append(plan_op)
+            if refresh_due:
+                from repro.core.router import refresh_centroids
+                with self.tracer.span("compaction.refresh_centroids"):
+                    refresh_centroids(candidate)
+                self.refreshes += 1
 
-        # 3. lock-free catch-up: drain what writers appended meanwhile
-        for _ in range(self.catchup_rounds):
-            n = self._apply(candidate,
-                            old_log.replay(start=applied))
-            applied += n
-            if n == 0:
-                break
+            # 3. lock-free catch-up: drain writers' concurrent appends
+            with self.tracer.span("compaction.catchup"):
+                for _ in range(self.catchup_rounds):
+                    n = self._apply(candidate,
+                                    old_log.replay(start=applied))
+                    applied += n
+                    if n == 0:
+                        break
 
-        # 4. the commit window: writers excluded, queries still flowing
-        with self._write_lock:
-            applied += self._apply(candidate,
-                                   old_log.replay(start=applied))
-            self._fault("fold")
-            vid = store.publish(candidate, set_current=False)
-            self._fault("publish")          # <- RENAME landed: committed
-            self.truncated_records += old_log.truncate()
-            self._fault("truncate")
-            store.set_current(vid)
-            self._fault("flip")
-            self._fault("swap")
-            new_engine = None
-            if self.brokers is not None and self.name is not None:
-                new_engine = self.brokers.replace_index(
-                    self.name, candidate)
-            elif self.on_swap is not None:
-                new_engine = self.on_swap(candidate)
-            self.index = candidate          # new live write target, its
-            self._since_fold = 0            # empty log takes the journal
-        if new_engine is not None:
-            self.install(new_engine)
-        self.cycles += 1
-        self.folded_records += applied
-        self.last_version = vid
+            # 4. the commit window: writers excluded, queries flowing
+            with self.tracer.span("compaction.commit"):
+                with self._write_lock:
+                    applied += self._apply(candidate,
+                                           old_log.replay(start=applied))
+                    self._fault("fold")
+                    vid = store.publish(candidate, set_current=False)
+                    self._fault("publish")  # <- RENAME landed: committed
+                    self._m_truncated.inc(old_log.truncate())
+                    self._fault("truncate")
+                    store.set_current(vid)
+                    self._fault("flip")
+                    self._fault("swap")
+                    new_engine = None
+                    if self.brokers is not None and self.name is not None:
+                        new_engine = self.brokers.replace_index(
+                            self.name, candidate)
+                    elif self.on_swap is not None:
+                        new_engine = self.on_swap(candidate)
+                    if new_engine is not None:
+                        self._m_swaps.inc()
+                        self.tracer.instant("maintenance.swap",
+                                            version=vid)
+                    self.index = candidate  # new live write target, its
+                    self._since_fold = 0    # empty log takes the journal
+            if new_engine is not None:
+                self.install(new_engine)
+            self._m_cycles.inc()
+            self._m_folded.inc(applied)
+            self.last_version = vid
+            cyc.set(version_to=vid, folded=applied)
         if self.gc_keep is not None:
             store.gc(keep=self.gc_keep)
         return vid
@@ -368,6 +421,7 @@ class Compactor:
     def stats(self) -> dict:
         return {
             "cycles": self.cycles,
+            "swaps": self.swaps,
             "active": self._active,
             "pending_records": self._since_fold,
             "threshold_records": self.threshold_records,

@@ -1,0 +1,144 @@
+"""Deterministic tests for the signal-driven autoscaler.
+
+Every test drives :meth:`Autoscaler.tick` directly and injects the
+engine's own signals (``engine.tracker.observe`` for p99, the routing
+counters for access rate) — no background thread, no sleeps, no
+wall-clock dependence anywhere.
+"""
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core.meta_index import build_pyramid_index
+from repro.data.synthetic import clustered_vectors
+from repro.obs import MetricsRegistry, Tracer
+from repro.serving.autoscaler import Autoscaler, AutoscalerConfig
+from repro.serving.engine import ServingEngine
+
+
+@pytest.fixture(scope="module")
+def index():
+    x = clustered_vectors(1000, 8, 8, seed=0)
+    cfg = PyramidConfig(metric="l2", num_shards=2, meta_size=16,
+                        sample_size=500, branching_factor=2,
+                        max_degree=8, max_degree_upper=4,
+                        ef_construction=30, ef_search=30, kmeans_iters=4)
+    return build_pyramid_index(x, cfg)
+
+
+@pytest.fixture()
+def engine(index):
+    eng = ServingEngine(index, replicas=1, hedge=False,
+                        registry=MetricsRegistry(), tracer=Tracer())
+    yield eng
+    eng.shutdown()
+
+
+CFG = dict(min_replicas=1, max_replicas=3, p99_high_s=0.5,
+           p99_low_s=0.1, access_high=None, scale_down_after=2,
+           cooldown_ticks=1)
+
+
+def _observe(eng, shard, value, n=32):
+    for _ in range(n):
+        eng.tracker.observe(shard, value)
+
+
+def test_scale_up_on_p99_inflation(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**CFG))
+    assert sc.tick() == []              # no samples yet -> no action
+    _observe(engine, 0, 1.0)            # p99 = 1.0s > 0.5s threshold
+    actions = sc.tick()
+    assert [(a[0], a[1], a[2]) for a in actions] == [(0, "up", 2)]
+    assert engine.replica_count(0) == 2
+    assert engine.replica_count(1) == 1     # quiet shard untouched
+    prom = engine.obs.render_prometheus()
+    assert 'pyramid_autoscaler_scale_ups_total{shard="0"} 1' in prom
+    ups = [s for s in engine.tracer.snapshot()
+           if s.name == "autoscaler.scale_up"]
+    assert len(ups) == 1 and ups[0].attrs["shard"] == 0
+
+
+def test_cooldown_blocks_immediate_reaction(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**CFG))
+    _observe(engine, 0, 1.0)
+    assert sc.tick()                    # up, starts cooldown
+    assert sc.tick() == []              # cooldown tick: shard sits out
+    assert sc.tick() != []              # still hot -> scales up again
+    assert engine.replica_count(0) == 3
+
+
+def test_hysteresis_scale_down_needs_consecutive_quiet_ticks(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**CFG))
+    _observe(engine, 0, 1.0)
+    assert sc.tick() == [(0, "up", 2,
+                          "p99=1.0000s>0.5s")]
+    sc.tick()                           # burn the cooldown tick
+    # flush the window with quiet samples: p99 drops below p99_low_s
+    _observe(engine, 0, 0.01, n=256)
+    assert sc.tick() == []              # quiet tick 1: streak, no action
+    actions = sc.tick()                 # quiet tick 2: scale down
+    assert [(a[0], a[1], a[2]) for a in actions] == [(0, "down", 1)]
+    assert engine.replica_count(0) == 1
+    prom = engine.obs.render_prometheus()
+    assert 'pyramid_autoscaler_scale_downs_total{shard="0"} 1' in prom
+    downs = [s for s in engine.tracer.snapshot()
+             if s.name == "autoscaler.scale_down"]
+    assert len(downs) == 1
+
+
+def test_hysteresis_band_resets_the_streak(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**CFG))
+    _observe(engine, 0, 1.0)
+    sc.tick()                           # up to 2 replicas
+    sc.tick()                           # cooldown
+    _observe(engine, 0, 0.01, n=256)
+    assert sc.tick() == []              # quiet tick: streak = 1
+    _observe(engine, 0, 0.3, n=256)     # mid-band: 0.1 < p99 < 0.5
+    assert sc.tick() == []              # band tick RESETS the streak
+    _observe(engine, 0, 0.01, n=256)
+    assert sc.tick() == []              # streak restarts at 1
+    assert engine.replica_count(0) == 2     # still scaled up
+    assert sc.tick() != []              # second consecutive quiet tick
+    assert engine.replica_count(0) == 1
+
+
+def test_never_scales_below_min_or_above_max(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**{
+        **CFG, "max_replicas": 2, "cooldown_ticks": 0}))
+    _observe(engine, 0, 1.0)
+    assert sc.tick()                    # 1 -> 2
+    assert sc.tick() == []              # at max: hot but capped
+    _observe(engine, 1, 0.01, n=256)
+    for _ in range(4):
+        assert sc.tick() == []          # shard 1 at min_replicas: never
+    assert engine.replica_count(1) == 1
+
+
+def test_access_rate_triggers_scale_up_before_latency(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**{
+        **CFG, "access_high": 0.8}))
+    # inject the routing counters directly: 90% of routes hit shard 0,
+    # no latency samples at all (the hot-shard signal fires first)
+    with engine._lock:
+        engine._routed_queries = 100
+        engine._routed_per_shard = np.array([90, 30], np.int64)
+    actions = sc.tick()
+    assert [(a[0], a[1], a[2]) for a in actions] == [(0, "up", 2)]
+    assert "access=0.900" in actions[0][3]
+
+
+def test_min_replicas_zero_rejected(engine):
+    with pytest.raises(ValueError):
+        Autoscaler(engine, AutoscalerConfig(min_replicas=0))
+
+
+def test_stats_and_defaults_wire_to_engine_obs(engine):
+    sc = Autoscaler(engine, AutoscalerConfig(**CFG))
+    assert sc.obs is engine.obs
+    assert sc.tracer is engine.tracer
+    sc.tick()
+    st = sc.stats()
+    assert st["ticks"] == 1
+    assert st["actions"] == []
+    assert st["config"]["max_replicas"] == 3
