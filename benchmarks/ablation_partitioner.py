@@ -17,7 +17,6 @@ import numpy as np
 
 from benchmarks import common as C
 from repro.common.config import PyramidConfig
-from repro.core import metrics as M
 from repro.core.distributed import search_single_host
 from repro.core.meta_index import build_pyramid_index
 import repro.core.meta_index as MI

@@ -16,7 +16,9 @@ committed baseline copy (``--baseline``, default
     (``"quick": true``); full-scale and quick numbers are not
     comparable;
   * a baseline artifact has no fresh counterpart (a benchmark silently
-    dropped out of CI), or a gated leaf vanished from the fresh payload.
+    dropped out of CI), or a gated leaf vanished from the fresh payload;
+  * a suite registered as gated in ``benchmarks/suites.py`` has no
+    committed baseline at all (a new benchmark cannot land ungated).
 
 Leaves are aligned by JSON path (dict keys + list indices), so per-row
 tables (fig12 shares x modes, quant metrics) compare row-for-row.
@@ -312,6 +314,17 @@ def main() -> None:
         sys.exit(1)
 
     all_violations, checked = [], 0
+    # registry completeness: every gated suite in benchmarks/suites.py
+    # must have a committed quick baseline — a suite added to the
+    # registry (and thus to CI) cannot silently run ungated
+    from benchmarks import suites as suite_registry
+    for suite in suite_registry.gated_suites():
+        if suite.artifact not in names:
+            all_violations.append(
+                f"{suite.artifact}: suite {suite.name!r} is registered "
+                f"as gated in benchmarks/suites.py but has no committed "
+                f"baseline under {args.baseline} (run it with --quick "
+                f"and adopt via --update-baselines)")
     for name in names:
         fresh_path = os.path.join(args.fresh, name)
         if not os.path.exists(fresh_path):

@@ -7,8 +7,6 @@ the paper's cluster-scale numbers.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np

@@ -1,0 +1,145 @@
+"""Self-describing benchmark-suite registry.
+
+One table (``SUITES``) describes every benchmark CI runs: module,
+artifact filename, extra CLI args, and whether the artifact is gated by
+``benchmarks/bench_gate.py`` against a committed quick baseline. Both CI
+bench jobs are a single loop over this registry::
+
+    PYTHONPATH=src python -m benchmarks.suites --run quick --out fresh-bench
+    PYTHONPATH=src python -m benchmarks.suites --run full  --out trend-bench
+
+so adding a benchmark is one registry entry, not four hand-duplicated
+workflow steps. ``bench_gate`` imports the same table and fails when a
+registered gated suite has no committed quick baseline — a suite cannot
+silently run ungated.
+
+Each suite module owns its own semantics (self-gates print ``... GATE
+FAILED`` to stderr and exit non-zero); this runner only sequences them
+and stops at the first failure.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import subprocess
+import sys
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Suite:
+    """One registered benchmark.
+
+    ``artifact`` is the ``BENCH_*.json`` filename the module writes via
+    ``--out`` (it does not always match the module name: the roofline
+    suite emits ``BENCH_beam_kernel.json``). ``extra_args`` are appended
+    in both quick and full modes. ``gated=True`` means bench_gate diffs
+    the quick artifact against ``benchmarks/baselines/<artifact>``.
+    """
+
+    name: str
+    module: str
+    artifact: str
+    title: str
+    extra_args: Tuple[str, ...] = ()
+    gated: bool = True
+
+
+SUITES: Tuple[Suite, ...] = (
+    Suite("fig7_throughput", "benchmarks.fig7_throughput",
+          "BENCH_fig7_throughput.json",
+          "fig7 throughput (QPS vs shard count)"),
+    Suite("fig12_straggler", "benchmarks.fig12_straggler",
+          "BENCH_fig12_straggler.json",
+          "fig12 straggler robustness (scripted FaultSchedule)"),
+    Suite("fig13_failure", "benchmarks.fig13_failure",
+          "BENCH_fig13_failure.json",
+          "fig13 failure recovery (scripted FaultSchedule)"),
+    Suite("bench_build", "benchmarks.bench_build", "BENCH_build.json",
+          "build subsystem + determinism gate",
+          extra_args=("--workers", "4", "--check-determinism")),
+    Suite("bench_quant", "benchmarks.bench_quant", "BENCH_quant.json",
+          "quantized arena (recall/QPS/bytes, 3 metrics)"),
+    Suite("bench_decode_stream", "benchmarks.bench_decode_stream",
+          "BENCH_decode_stream.json",
+          "streaming decode (tokens/s + per-token kNN hit parity)"),
+    Suite("roofline", "benchmarks.roofline", "BENCH_beam_kernel.json",
+          "kernel roofline (fused beam search vs loop path)"),
+    Suite("bench_compaction", "benchmarks.bench_compaction",
+          "BENCH_compaction.json",
+          "compaction under load (QPS/p99/recall, on vs off)"),
+    Suite("bench_multitenant", "benchmarks.bench_multitenant",
+          "BENCH_multitenant.json",
+          "multi-tenant isolation + filtered-search recall"),
+)
+
+
+def get(name: str) -> Suite:
+    for s in SUITES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown benchmark suite {name!r}; "
+                   f"registered: {[s.name for s in SUITES]}")
+
+
+def gated_suites() -> Tuple[Suite, ...]:
+    return tuple(s for s in SUITES if s.gated)
+
+
+def command(suite: Suite, *, quick: bool, out_dir: str) -> list:
+    """The exact argv the CI step for ``suite`` runs."""
+    cmd = [sys.executable, "-m", suite.module]
+    if quick:
+        cmd.append("--quick")
+    cmd += list(suite.extra_args)
+    cmd += ["--out", os.path.join(out_dir, suite.artifact)]
+    return cmd
+
+
+def run_suite(suite: Suite, *, quick: bool, out_dir: str) -> int:
+    cmd = command(suite, quick=quick, out_dir=out_dir)
+    print(f"[suites] {suite.name}: {' '.join(cmd)}", file=sys.stderr)
+    return subprocess.call(cmd)
+
+
+def main(argv: Optional[list] = None) -> None:
+    ap = argparse.ArgumentParser(
+        description="run the registered benchmark suites")
+    ap.add_argument("--run", choices=("quick", "full"),
+                    help="execute every registered suite at this scale")
+    ap.add_argument("--out", default="fresh-bench", metavar="DIR",
+                    help="artifact directory (BENCH_*.json per suite)")
+    ap.add_argument("--only", action="append", default=None,
+                    metavar="NAME", help="restrict to named suite(s); "
+                    "repeatable")
+    ap.add_argument("--list", action="store_true",
+                    help="print the registry and exit")
+    args = ap.parse_args(argv)
+
+    selected = (tuple(get(n) for n in args.only) if args.only
+                else SUITES)
+    if args.list or not args.run:
+        for s in selected:
+            gate = "gated" if s.gated else "ungated"
+            extra = f" {' '.join(s.extra_args)}" if s.extra_args else ""
+            print(f"{s.name:22s} {s.artifact:30s} [{gate}]{extra}"
+                  f"  - {s.title}")
+        return
+
+    failures = []
+    for s in selected:
+        rc = run_suite(s, quick=args.run == "quick", out_dir=args.out)
+        if rc != 0:
+            failures.append((s.name, rc))
+            print(f"[suites] {s.name} FAILED (exit {rc})",
+                  file=sys.stderr)
+            break   # fail fast: later artifacts would mask the failure
+    if failures:
+        sys.exit(1)
+    print(f"[suites] {len(selected)} suites completed -> {args.out}/",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""CI lane-partition check: the three test-lane marker expressions must
+exactly partition the suite.
+
+CI splits tier-1 tests across three jobs by marker expression::
+
+    fast   -m "not slow and not faults"
+    slow   -m "slow and not faults"
+    faults -m "faults"
+
+A test that matches none of these (or two of them) silently escapes (or
+double-runs in) the matrix. This script collects each lane with
+``pytest --collect-only -q`` and asserts
+
+    |fast| + |slow| + |faults| == |total|
+
+where total is an unfiltered collection. Exit 1 with the per-lane counts
+on any mismatch.
+
+Usage (repo root): ``PYTHONPATH=src python scripts/check_lane_partition.py``
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+
+LANES = {
+    "fast": "not slow and not faults",
+    "slow": "slow and not faults",
+    "faults": "faults",
+}
+
+
+def collect_count(markers: str | None = None) -> int:
+    cmd = [sys.executable, "-m", "pytest", "--collect-only", "-q"]
+    if markers is not None:
+        cmd += ["-m", markers]
+    proc = subprocess.run(cmd, capture_output=True, text=True)
+    # exit 5 = "no tests collected", a legal count of 0 for a lane
+    if proc.returncode not in (0, 5):
+        print(proc.stdout, file=sys.stderr)
+        print(proc.stderr, file=sys.stderr)
+        raise SystemExit(
+            f"pytest --collect-only failed (exit {proc.returncode})")
+    # each collected test prints one "path::test_id" line
+    return sum("::" in line for line in proc.stdout.splitlines())
+
+
+def main() -> None:
+    total = collect_count()
+    counts = {lane: collect_count(expr) for lane, expr in LANES.items()}
+    covered = sum(counts.values())
+    summary = " + ".join(f"{lane}={n}" for lane, n in counts.items())
+    print(f"[lane-partition] {summary} -> {covered} (total {total})")
+    if covered != total:
+        print(
+            f"LANE PARTITION BROKEN: the lane marker expressions cover "
+            f"{covered} of {total} collected tests. Some test matches "
+            f"zero or multiple of the CI lane expressions "
+            f"{list(LANES.values())} - fix its markers.",
+            file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -200,6 +200,19 @@ class Brokers:
             f"brokers: engine '{name}' was removed (brokers shut down?) "
             f"during replace_index")
 
+    def close_engine(self, name: str) -> bool:
+        """Shut down and deregister ONE engine (the tenant manager's
+        eviction path). Returns whether an engine was actually closed;
+        clients bound via :meth:`open_client` fail their next call with
+        ``KeyError`` until the name is served again."""
+        with self._lock:
+            eng = self._engines.pop(name, None)
+        if eng is None:
+            return False
+        eng.drain()
+        eng.shutdown()
+        return True
+
     def attach_maintenance(self, name: str, store, **opts):
         """Create a :class:`repro.store.maintenance.Compactor` wired to
         this broker entry: it folds ``name``'s delta log into new

@@ -269,7 +269,9 @@ def _stack_host(index, quantize=None) -> Dict[str, np.ndarray]:
 def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
                  *, metric: str, k: int, ef: int, capacity: int,
                  max_iters: int = 400, shard_axis: str = "kernel",
-                 use_kernel: bool = True):
+                 use_kernel: bool = True,
+                 tag_words: Optional[jnp.ndarray] = None,
+                 filter_words: Optional[jnp.ndarray] = None):
     """Capacity-bounded beam search mapped over the shard axis.
 
     Each shard drains its <= ``capacity`` assigned queries from ``mask``
@@ -293,6 +295,13 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
         sequential dispatches that cannot feed the Pallas kernel).
       use_kernel: allow the Pallas kernel ("kernel" strategy on TPU).
         Must be False inside ``shard_map`` — same rule as ``merge_topk``.
+      tag_words / filter_words: optional metadata alive-mask
+        (``repro.core.filters``): [w, n_pad, 2] i32 item tag words
+        aligned with the arena stacking (``PyramidIndex.tags_arena``)
+        and [B, 2] i32 per-query filter words. Dead candidates leave
+        each shard as (-inf, -1) — the per-shard partials are already
+        filtered BEFORE the cross-shard merge, so a filtered query
+        fills its k from live matches only.
 
     Returns (qidx [w, C] i32, ids [w, C, k] i32, scores [w, C, k] f32).
 
@@ -303,6 +312,15 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
     the representation-specific distance is preserved.
     """
     b = queries.shape[0]
+    # per-slot filter words follow the same queue-drain gather as the
+    # queries: a dummy row of zero words absorbs invalid slots, so
+    # overflow/empty slots always walk unfiltered (their results are
+    # invalidated below anyway)
+    fw_pad = None
+    if tag_words is not None and filter_words is not None:
+        fw_pad = jnp.concatenate(
+            [filter_words.astype(jnp.int32),
+             jnp.zeros((1, 2), jnp.int32)], axis=0)          # [B+1, 2]
 
     if shard_axis == "kernel":
         # drain each shard's queue, then walk ALL (shard, slot) rows in
@@ -323,7 +341,9 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
             ef=efb, max_iters=max_iters,
             scale=None if scale is None else scale[0],
             zero=None if scale is None else arena.zero[0],
-            use_kernel=use_kernel)
+            use_kernel=use_kernel,
+            tag_words=tag_words,
+            filter_words=None if fw_pad is None else fw_pad[qidx])
         kk = min(k, scores.shape[-1])
         top_scores, idx = jax.lax.top_k(scores, kk)
         top_nodes = jnp.take_along_axis(nodes, idx, axis=2)
@@ -344,20 +364,33 @@ def shard_search(arena: ShardArena, mask: jnp.ndarray, queries: jnp.ndarray,
             slot_valid[:, :, None], top_scores, -jnp.inf)
         return qidx.astype(jnp.int32), ids_out, scores_out
 
-    def one_shard(arena_slice, shard_mask):
+    def one_shard(arena_slice, shard_mask, tw=None):
         g = arena_slice.as_graph()
         qidx = jnp.nonzero(shard_mask, size=capacity, fill_value=b)[0]
         slot_valid = qidx < b
         qs = queries[jnp.clip(qidx, 0, b - 1)]               # [C, d]
-        ids_out, scores_out = jax.vmap(lambda qv: H.search_one(
-            g, qv, metric=metric, k=k, ef=ef, max_iters=max_iters))(qs)
+        if tw is None:
+            ids_out, scores_out = jax.vmap(lambda qv: H.search_one(
+                g, qv, metric=metric, k=k, ef=ef,
+                max_iters=max_iters))(qs)
+        else:
+            ids_out, scores_out = jax.vmap(
+                lambda qv, f: H.search_one(
+                    g, qv, metric=metric, k=k, ef=ef,
+                    max_iters=max_iters, tag_words=tw,
+                    filter_words=f))(qs, fw_pad[qidx])
         ids_out = jnp.where(slot_valid[:, None], ids_out, -1)
         scores_out = jnp.where(slot_valid[:, None], scores_out, -jnp.inf)
         return qidx.astype(jnp.int32), ids_out, scores_out
 
+    if fw_pad is None:
+        if shard_axis == "map":
+            return jax.lax.map(lambda t: one_shard(*t), (arena, mask.T))
+        return jax.vmap(one_shard)(arena, mask.T)
     if shard_axis == "map":
-        return jax.lax.map(lambda t: one_shard(*t), (arena, mask.T))
-    return jax.vmap(one_shard)(arena, mask.T)
+        return jax.lax.map(lambda t: one_shard(*t),
+                           (arena, mask.T, tag_words))
+    return jax.vmap(one_shard)(arena, mask.T, tag_words)
 
 
 def scatter_partials(qidx: jnp.ndarray, ids: jnp.ndarray,
@@ -381,14 +414,19 @@ def scatter_partials(qidx: jnp.ndarray, ids: jnp.ndarray,
 def _search_scatter_merge(arena: ShardArena, mask: jnp.ndarray,
                           queries: jnp.ndarray, *, metric: str, k: int,
                           ef: int, capacity: int, max_iters: int,
-                          use_kernel: bool, shard_axis: str):
+                          use_kernel: bool, shard_axis: str,
+                          tag_words=None, filter_words=None):
     """The shared post-routing pipeline body: shard_search -> scatter ->
-    dedup merge. Both jitted entry points delegate here."""
+    dedup merge. Both jitted entry points delegate here. With
+    ``tag_words``/``filter_words`` the per-shard partials arrive already
+    alive-masked (pre-merge filtering), so the merge needs no extra
+    mask."""
     b = queries.shape[0]
     qidx, ids, scores = shard_search(
         arena, mask, queries, metric=metric, k=k, ef=ef,
         capacity=capacity, max_iters=max_iters, shard_axis=shard_axis,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel, tag_words=tag_words,
+        filter_words=filter_words)
     flat_s, flat_i = scatter_partials(qidx, ids, scores, b)
     top_s, top_i = merge_topk(flat_s, flat_i, k=k, use_kernel=use_kernel)
     return top_i, top_s
@@ -401,7 +439,8 @@ def _fused_routed(arena: ShardArena, meta: H.HNSWArrays,
                   part_of_center: jnp.ndarray, queries: jnp.ndarray, *,
                   metric: str, k: int, ef: int, branching_factor: int,
                   capacity: int, max_iters: int, naive: bool,
-                  use_kernel: bool, shard_axis: str):
+                  use_kernel: bool, shard_axis: str,
+                  tag_words=None, filter_words=None):
     """route -> shard_search -> scatter -> merge, one jitted program."""
     b = queries.shape[0]
     w = arena.data.shape[0]
@@ -415,7 +454,8 @@ def _fused_routed(arena: ShardArena, meta: H.HNSWArrays,
     top_i, top_s = _search_scatter_merge(
         arena, mask, queries, metric=metric, k=k, ef=ef,
         capacity=capacity, max_iters=max_iters, use_kernel=use_kernel,
-        shard_axis=shard_axis)
+        shard_axis=shard_axis, tag_words=tag_words,
+        filter_words=filter_words)
     return top_i, top_s, mask
 
 
@@ -425,12 +465,13 @@ def _fused_routed(arena: ShardArena, meta: H.HNSWArrays,
 def _fused_masked(arena: ShardArena, mask: jnp.ndarray,
                   queries: jnp.ndarray, *, metric: str, k: int, ef: int,
                   capacity: int, max_iters: int, use_kernel: bool,
-                  shard_axis: str):
+                  shard_axis: str, tag_words=None, filter_words=None):
     """shard_search -> scatter -> merge with a caller-provided mask."""
     return _search_scatter_merge(
         arena, mask, queries, metric=metric, k=k, ef=ef,
         capacity=capacity, max_iters=max_iters, use_kernel=use_kernel,
-        shard_axis=shard_axis)
+        shard_axis=shard_axis, tag_words=tag_words,
+        filter_words=filter_words)
 
 
 def arena_search(arena: ShardArena, meta: H.HNSWArrays,
@@ -441,7 +482,9 @@ def arena_search(arena: ShardArena, meta: H.HNSWArrays,
                  capacity_factor: float = 2.0, max_iters: int = 400,
                  naive: bool = False, use_kernel: bool = True,
                  mask: Optional[jnp.ndarray] = None,
-                 shard_axis: Optional[str] = None):
+                 shard_axis: Optional[str] = None,
+                 tag_words: Optional[jnp.ndarray] = None,
+                 filter_words: Optional[jnp.ndarray] = None):
     """Fused distributed search over a device-resident arena (Alg. 4).
 
     Routes through the replicated meta-HNSW, beam-searches the <= K
@@ -461,6 +504,11 @@ def arena_search(arena: ShardArena, meta: H.HNSWArrays,
         :func:`shard_search`); defaults to "kernel" — ONE strategy on
         every backend (the op layer picks Pallas on TPU, the fused
         oracle elsewhere), retiring the old CPU "map" special case.
+      tag_words / filter_words: optional metadata alive-mask (see
+        :func:`shard_search`): routing stays filter-blind, the per-shard
+        walk emits only alive candidates, the merge fills k from those.
+        Callers size ``ef``/``k`` for low selectivity via
+        ``repro.core.filters.inflation`` (``search_single_host`` does).
 
     Returns (ids [B, k] i32, scores [B, k] f32, mask [B, w] bool).
     """
@@ -479,10 +527,12 @@ def arena_search(arena: ShardArena, meta: H.HNSWArrays,
         ids, scores = _fused_masked(
             arena, jnp.asarray(mask), queries, metric=metric, k=k, ef=ef,
             capacity=capacity, max_iters=max_iters, use_kernel=use_kernel,
-            shard_axis=shard_axis)
+            shard_axis=shard_axis, tag_words=tag_words,
+            filter_words=filter_words)
         return ids, scores, mask
     return _fused_routed(
         arena, meta, part_of_center, queries, metric=metric, k=k, ef=ef,
         branching_factor=branching_factor, capacity=capacity,
         max_iters=max_iters, naive=naive, use_kernel=use_kernel,
-        shard_axis=shard_axis)
+        shard_axis=shard_axis, tag_words=tag_words,
+        filter_words=filter_words)

@@ -290,18 +290,27 @@ class PyramidClient:
     # -- queries -----------------------------------------------------------
 
     def search(self, query: np.ndarray, k: int = 10, *,
-               branching_factor: Optional[int] = None) -> SearchFuture:
-        """Submit ONE query vector; returns its future immediately."""
+               branching_factor: Optional[int] = None,
+               filter_tags=None) -> SearchFuture:
+        """Submit ONE query vector; returns its future immediately.
+
+        ``filter_tags`` (int64 bitset; ``repro.core.filters``
+        semantics) restricts results to items whose tag bitset
+        intersects it — 0 / ``None`` means unfiltered."""
         return self.search_batch(np.asarray(query)[None, :], k,
-                                 branching_factor=branching_factor)[0]
+                                 branching_factor=branching_factor,
+                                 filter_tags=filter_tags)[0]
 
     def search_batch(self, queries: np.ndarray, k: int = 10, *,
-                     branching_factor: Optional[int] = None
-                     ) -> List[SearchFuture]:
+                     branching_factor: Optional[int] = None,
+                     filter_tags=None) -> List[SearchFuture]:
         """Submit a [n, d] batch; returns one future per query, in
-        submit order. Use :func:`as_completed` to stream the merges."""
+        submit order. Use :func:`as_completed` to stream the merges.
+        ``filter_tags`` is a scalar or per-query int64 bitset (see
+        :meth:`search`)."""
         return self.engine.submit(queries, k=k,
-                                  branching_factor=branching_factor)
+                                  branching_factor=branching_factor,
+                                  filter_tags=filter_tags)
 
     # -- lifecycle / introspection (public replacements for the old
     # ``engine._spawn`` / ``engine.executors`` poking) ---------------------

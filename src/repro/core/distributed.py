@@ -37,6 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.common.jax_compat import shard_map
 
 from repro.common.config import PyramidConfig
+from repro.core import filters as F
 from repro.core import hnsw as H
 from repro.core import metrics as M
 from repro.core import quant as Q
@@ -70,7 +71,8 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
                        ef: Optional[int] = None,
                        branching_factor: Optional[int] = None,
                        naive: bool = False, quantize: bool = False,
-                       rerank_factor: int = 4):
+                       rerank_factor: int = 4,
+                       filter_tags=None):
     """Alg. 4 single-host entry point, on the fused arena pipeline.
 
     Routes on device, then runs ``arena_search`` with a precomputed mask
@@ -88,6 +90,14 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
     against ``index.rerank_table()`` keeps the k best — recall@10 stays
     within 1% of the float path (see ``tests/test_quant.py``) while the
     device vector payload shrinks ~4x.
+
+    ``filter_tags`` (scalar int64, or [B] per query) runs metadata-
+    filtered kNN (``repro.core.filters``): the alive-mask is applied on
+    device at the walk's candidate emission — pre-merge, never
+    post-filter-then-under-fill — and the candidate budget
+    (``ef``/per-shard k/``rerank_factor``) auto-inflates by
+    1/selectivity (capped) so thin filters keep filling k.
+
     Returns (ids [B, k], scores [B, k], mask [B, w]); with
     ``quantize=True`` the scores are exact float32 similarities.
     """
@@ -99,8 +109,25 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
     b = q.shape[0]
     w = index.num_shards
     arena = index.arena("int8" if quantize else "float32")
-    k_search = k * rerank_factor if quantize else k
-    ef = max(ef, k_search)
+
+    tag_words = None
+    filters_np = None
+    inflate = 1
+    if filter_tags is not None:
+        filters_np = np.broadcast_to(
+            np.asarray(filter_tags, dtype=np.int64), (b,)).copy()
+        if np.any(filters_np != 0):
+            tag_words = index.tags_arena()
+            # size the candidate budget for the thinnest filter in the
+            # batch (the filter-selectivity rerank rule, see API.md)
+            sel = min(F.selectivity_np(index.tags_host(), int(f))
+                      for f in np.unique(filters_np))
+            inflate = F.inflation(sel)
+        else:
+            filters_np = None
+
+    k_search = (k * rerank_factor if quantize else k) * inflate
+    ef = max(ef * inflate, k_search)
 
     if naive:
         mask = np.ones((b, w), dtype=bool)
@@ -114,24 +141,31 @@ def search_single_host(index: PyramidIndex, queries: np.ndarray, k: int, *,
     bp = _pow2(b)
     qp = q
     mp = mask
+    fp = filters_np
     if bp > b:   # pad with the first query, routed nowhere
         qp = np.concatenate([q, np.repeat(q[:1], bp - b, axis=0)])
         mp = np.concatenate(
             [mask, np.zeros((bp - b, w), dtype=bool)])
+        if fp is not None:   # pad rows run unfiltered (routed nowhere)
+            fp = np.concatenate([fp, np.zeros(bp - b, np.int64)])
     max_load = int(mp.sum(axis=0).max())
     capacity = min(bp, max(32, -(-max_load // 32) * 32))
 
+    filter_words = None
+    if fp is not None:
+        filter_words = jnp.asarray(F.filter_words(fp))
     ids, scores, _ = arena_search(
         arena, None, None, jnp.asarray(qp), metric=metric, k=k_search,
-        ef=ef, capacity=capacity, mask=jnp.asarray(mp))
+        ef=ef, capacity=capacity, mask=jnp.asarray(mp),
+        tag_words=tag_words, filter_words=filter_words)
     if quantize:
         table_ids, table_vecs = index.rerank_table()
         out_ids, out_scores = Q.exact_rerank_np(
             q, np.asarray(ids)[:b], k, table_ids=table_ids,
             table_vecs=table_vecs, metric=metric)
         return out_ids, out_scores, mask
-    return (np.asarray(ids)[:b].astype(np.int64),
-            np.asarray(scores)[:b], mask)
+    return (np.asarray(ids)[:b, :k].astype(np.int64),
+            np.asarray(scores)[:b, :k], mask)
 
 
 def search_single_host_python(index: PyramidIndex, queries: np.ndarray,

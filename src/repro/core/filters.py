@@ -1,0 +1,108 @@
+"""Metadata filter semantics for filtered kNN.
+
+Every item carries an int64 **tag bitset**; a query carries an int64
+``filter_tags`` word. The contract, shared by every search path
+(fused kernel / jnp oracle / numpy twin / host reference):
+
+  * ``filter_tags == 0``  -> no filtering (every item alive);
+  * ``filter_tags != 0``  -> item alive iff ``tags & filter_tags != 0``
+    (ANY-of bit match).
+
+Filtering is applied as an **alive-mask on candidates** — after the
+beam walk emits its candidate set, before the per-shard top-k and the
+cross-shard merge — never on the navigation beam itself (masking the
+walk would disconnect the HNSW graph and collapse recall) and never as
+a post-merge drop (which under-fills k). Dead candidates become
+``(-inf, -1)`` exactly like structural padding, so the downstream
+top-k/merge machinery needs no new cases.
+
+Device representation: JAX runs with x64 disabled, so an int64 array
+pushed to the device silently truncates to 32 bits. Tags therefore
+travel device-side as **two int32 words** ``[..., 2]`` (lo, hi) and the
+alive test ORs the two per-word intersections — the full 64-bit bitset
+survives. :func:`split_tag_words` / :func:`filter_words` produce the
+word form from host int64 values.
+
+Selectivity handling: at low selectivity the walk's candidate set
+thins out after masking, so callers inflate the candidate budget
+(``ef`` / per-shard k / ``rerank_factor``) by ``1/selectivity`` capped
+at :data:`INFLATE_CAP` — see :func:`inflation` (the "filter-selectivity
+rerank rule" in API.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+# hard cap on the 1/selectivity candidate-budget inflation: below
+# 1/INFLATE_CAP selectivity the graph walk itself is the wrong tool
+# (a brute-force scan over the tagged subset would win) — we keep the
+# budget bounded instead of chasing arbitrarily thin filters
+INFLATE_CAP = 8
+
+_LO_MASK = np.uint64(0xFFFFFFFF)
+_SHIFT = np.uint64(32)
+
+
+def split_tag_words(tags: np.ndarray) -> np.ndarray:
+    """Host int64 tag bitsets ``[...]`` -> device-safe int32 word pairs
+    ``[..., 2]`` (lo word, hi word)."""
+    t = np.asarray(tags).astype(np.uint64)
+    lo = (t & _LO_MASK).astype(np.uint32).view(np.int32)
+    hi = (t >> _SHIFT).astype(np.uint32).view(np.int32)
+    return np.stack([lo, hi], axis=-1)
+
+
+def filter_words(filter_tags) -> np.ndarray:
+    """Scalar-or-array int64 filter(s) -> int32 word pairs ``[..., 2]``."""
+    return split_tag_words(np.asarray(filter_tags, dtype=np.uint64))
+
+
+def alive_words(tag_words: jnp.ndarray, fw: jnp.ndarray) -> jnp.ndarray:
+    """Alive mask from word-split bitsets (device side).
+
+    Args:
+      tag_words: ``[..., 2]`` int32 item tag words.
+      fw: ``[..., 2]`` int32 filter words, broadcastable against
+        ``tag_words[..., 0]``'s shape.
+
+    Returns a bool mask of the broadcast shape: True where the filter
+    is empty (no filtering) or the bitsets intersect.
+    """
+    lo = jnp.bitwise_and(tag_words[..., 0], fw[..., 0])
+    hi = jnp.bitwise_and(tag_words[..., 1], fw[..., 1])
+    no_filter = jnp.bitwise_or(fw[..., 0], fw[..., 1]) == 0
+    return jnp.logical_or(no_filter, jnp.bitwise_or(lo, hi) != 0)
+
+
+def alive_np(tags: np.ndarray, filter_tags) -> np.ndarray:
+    """Numpy twin of :func:`alive_words` on raw int64 bitsets."""
+    t = np.asarray(tags).astype(np.uint64)
+    f = np.asarray(filter_tags, dtype=np.uint64)
+    return np.logical_or(f == 0, (t & f) != 0)
+
+
+def selectivity_np(tags: Optional[np.ndarray], filter_tags: int) -> float:
+    """Fraction of items alive under ``filter_tags`` (host estimate used
+    to size the candidate-budget inflation). ``filter == 0`` -> 1.0; an
+    untagged corpus under a non-zero filter -> 0.0."""
+    if int(filter_tags) == 0:
+        return 1.0
+    if tags is None or np.asarray(tags).size == 0:
+        return 0.0
+    return float(np.mean(alive_np(tags, filter_tags)))
+
+
+def inflation(selectivity: float, *, cap: int = INFLATE_CAP) -> int:
+    """Candidate-budget multiplier for a filter of the given selectivity:
+    ``ceil(1/selectivity)`` capped at ``cap`` (>= 1). Selectivity 0 maps
+    to the cap — the search still runs (and returns empty) at bounded
+    cost."""
+    if selectivity >= 1.0:
+        return 1
+    if selectivity <= 0.0:
+        return int(cap)
+    return int(min(int(cap), math.ceil(1.0 / selectivity)))

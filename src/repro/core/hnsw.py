@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import filters as F
 from repro.core import metrics as M
 from repro.kernels.beam_search import beam_search
 
@@ -60,6 +61,10 @@ class HNSWGraph:
       levels:     [n] int32, highest level of each node.
       entry:      int, entry vertex (node with the highest level).
       metric:     similarity function name.
+      tags:       optional [n] int64 metadata tag bitsets (dataset order,
+                  aligned with ``ids``) for filtered search
+                  (``repro.core.filters``); ``None`` == all zeros ==
+                  item matches no non-empty filter.
     """
 
     data: np.ndarray
@@ -68,6 +73,13 @@ class HNSWGraph:
     levels: np.ndarray
     entry: int
     metric: str
+    tags: Optional[np.ndarray] = None
+
+    def tags_or_zeros(self) -> np.ndarray:
+        """The tag bitsets, materialising zeros for untagged graphs."""
+        if self.tags is None:
+            return np.zeros((self.n,), dtype=np.int64)
+        return np.asarray(self.tags, dtype=np.int64)
 
     @property
     def n(self) -> int:
@@ -334,8 +346,14 @@ def build_hnsw(data: np.ndarray,
                max_degree_upper: int = 16,
                ef_construction: int = 100,
                seed: int = 0,
-               ids: Optional[np.ndarray] = None) -> HNSWGraph:
-    """Alg. 2: sequential-insert HNSW construction (host-side)."""
+               ids: Optional[np.ndarray] = None,
+               tags: Optional[np.ndarray] = None) -> HNSWGraph:
+    """Alg. 2: sequential-insert HNSW construction (host-side).
+
+    ``tags`` ([n] int64 bitsets, dataset order) are carried as metadata —
+    they never influence construction, so tagged and untagged builds of
+    the same data are graph-identical.
+    """
     data = np.ascontiguousarray(data, dtype=np.float32)
     n, d = data.shape
     if n == 0:
@@ -348,9 +366,11 @@ def build_hnsw(data: np.ndarray,
         np.full((n, max_degree), -1, dtype=np.int32)]
     if ids is None:
         ids = np.arange(n, dtype=np.int64)
+    if tags is not None:
+        tags = np.asarray(tags, dtype=np.int64)
     return HNSWGraph(
         data=data, ids=np.asarray(ids), neighbors=neighbors,
-        levels=b.levels[:n], entry=b.entry, metric=metric)
+        levels=b.levels[:n], entry=b.entry, metric=metric, tags=tags)
 
 
 def empty_hnsw(d: int, *, metric: str = "l2",
@@ -364,7 +384,8 @@ def empty_hnsw(d: int, *, metric: str = "l2",
         ids=np.zeros((0,), dtype=np.int64),
         neighbors=[np.full((0, max_degree), -1, dtype=np.int32)],
         levels=np.zeros((0,), dtype=np.int32),
-        entry=-1, metric=metric)
+        entry=-1, metric=metric,
+        tags=np.zeros((0,), dtype=np.int64))
 
 
 # ---------------------------------------------------------------------------
@@ -474,10 +495,19 @@ def _beam_search_bottom(g: HNSWArrays, q: jnp.ndarray, entry: jnp.ndarray,
 
 
 def search_one(g: HNSWArrays, q: jnp.ndarray, *, metric: str, k: int,
-               ef: int, max_iters: int = 400, max_steps: int = 64):
+               ef: int, max_iters: int = 400, max_steps: int = 64,
+               tag_words: Optional[jnp.ndarray] = None,
+               filter_words: Optional[jnp.ndarray] = None):
     """One query against one graph: greedy descend through the upper
     layers, bottom-layer beam search, top-k, node -> external-id
     translation, (-1, -inf) padding when the graph is smaller than k.
+
+    ``tag_words`` ([n, 2] i32 word-split bitsets) + ``filter_words``
+    ([2] i32) apply the metadata alive-mask (``repro.core.filters``) on
+    the walk's candidate emission — navigation stays unfiltered (a
+    filtered beam would disconnect the graph), dead candidates become
+    (-inf, -1) before the top-k, so a filtered query can never
+    under-fill against live matches.
 
     This is THE per-query search core — ``hnsw_search`` (engine path) and
     the fused arena pipeline (``repro.core.arena.shard_search``) both
@@ -487,6 +517,10 @@ def search_one(g: HNSWArrays, q: jnp.ndarray, *, metric: str, k: int,
     ef = max(ef, k)
     entry = _greedy_descend(g, q, metric, max_steps=max_steps)
     scores, nodes = _beam_search_bottom(g, q, entry, metric, ef, max_iters)
+    if tag_words is not None and filter_words is not None:
+        alive = F.alive_words(tag_words[jnp.clip(nodes, 0)], filter_words)
+        scores = jnp.where(alive, scores, -jnp.inf)
+        nodes = jnp.where(alive, nodes, -1)
     kk = min(k, scores.shape[0])
     top_scores, idx = jax.lax.top_k(scores, kk)
     top_nodes = nodes[idx]
@@ -501,7 +535,9 @@ def search_one(g: HNSWArrays, q: jnp.ndarray, *, metric: str, k: int,
 
 def search_batch(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
                  k: int, ef: int, max_iters: int = 400,
-                 max_steps: int = 64, use_kernel: bool = True):
+                 max_steps: int = 64, use_kernel: bool = True,
+                 tag_words: Optional[jnp.ndarray] = None,
+                 filter_words: Optional[jnp.ndarray] = None):
     """Batched search through the fused beam-walk op
     (``repro.kernels.beam_search``): greedy upper-layer descent per query
     (cheap, stays in XLA), then ONE fused bottom-layer walk for the whole
@@ -512,6 +548,11 @@ def search_batch(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
     scoring lowers to the same per-row dots as ``score_nodes``. Trace-
     time only (call under jit). Returns (ids [B, k], scores [B, k])
     best-first with (-1, -inf) padding.
+
+    ``tag_words`` ([n, 2] i32) + ``filter_words`` ([B, 2] i32, one
+    filter per query) route the metadata alive-mask through the fused
+    op — candidates whose bitset misses the filter come back (-inf, -1)
+    before the top-k here (same contract as ``search_one``).
     """
     ef = max(ef, k)
     entries = jax.vmap(
@@ -522,7 +563,9 @@ def search_batch(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
     scores, nodes = beam_search(
         g.data[None], g.bottom[None], queries[None], entries[None],
         metric=metric, ef=ef, max_iters=max_iters, scale=scale, zero=zero,
-        use_kernel=use_kernel)
+        use_kernel=use_kernel,
+        tag_words=None if tag_words is None else tag_words[None],
+        filter_words=None if filter_words is None else filter_words[None])
     scores, nodes = scores[0], nodes[0]                # [B, ef']
     kk = min(k, scores.shape[1])
     top_scores, idx = jax.lax.top_k(scores, kk)
@@ -543,7 +586,9 @@ def search_batch(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
                                    "impl", "use_kernel"))
 def hnsw_search(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
                 k: int, ef: int = 100, max_iters: int = 400,
-                impl: str = "fused", use_kernel: bool = True):
+                impl: str = "fused", use_kernel: bool = True,
+                tag_words: Optional[jnp.ndarray] = None,
+                filter_words: Optional[jnp.ndarray] = None):
     """Batched HNSW search (Alg. 1).
 
     Args:
@@ -557,29 +602,51 @@ def hnsw_search(g: HNSWArrays, queries: jnp.ndarray, *, metric: str,
         (the roofline's baseline). Results are identical.
       use_kernel: allow the Pallas kernel on TPU ("fused" only). Must be
         False when traced inside ``shard_map`` (e.g. the SPMD router).
+      tag_words / filter_words: optional metadata alive-mask — [n, 2]
+        i32 item tag words and [B, 2] i32 per-query filter words
+        (``repro.core.filters.split_tag_words``); a query whose filter
+        words are zero runs unfiltered.
 
     Returns:
       (ids [B, k] int32 external ids (-1 pad), scores [B, k] f32) best-first.
     """
     if impl == "fused":
         return search_batch(g, queries, metric=metric, k=k, ef=ef,
-                            max_iters=max_iters, use_kernel=use_kernel)
-    return jax.vmap(lambda q: search_one(
-        g, q, metric=metric, k=k, ef=ef, max_iters=max_iters))(queries)
+                            max_iters=max_iters, use_kernel=use_kernel,
+                            tag_words=tag_words, filter_words=filter_words)
+    if tag_words is None or filter_words is None:
+        return jax.vmap(lambda q: search_one(
+            g, q, metric=metric, k=k, ef=ef, max_iters=max_iters))(queries)
+    return jax.vmap(lambda q, fw: search_one(
+        g, q, metric=metric, k=k, ef=ef, max_iters=max_iters,
+        tag_words=tag_words, filter_words=fw))(queries, filter_words)
 
 
 def search_numpy(graph: HNSWGraph, queries: np.ndarray, k: int,
-                 ef: int = 100) -> Tuple[np.ndarray, np.ndarray]:
+                 ef: int = 100, *, filter_tags=None
+                 ) -> Tuple[np.ndarray, np.ndarray]:
     """Host-side reference search (used during index building, Alg. 3 line 8,
-    and as an oracle in tests)."""
+    and as an oracle in tests).
+
+    ``filter_tags`` (scalar int64, or [B] per query) applies the
+    metadata alive-mask of ``repro.core.filters`` on the walk's
+    candidate set — the same navigate-unfiltered / emit-filtered
+    contract as the device paths.
+    """
     b = _Builder.__new__(_Builder)  # reuse _search_layer without re-init
     b.metric = graph.metric
     b.data = graph.data
     b.adj = graph.neighbors
-    out_ids = np.full((queries.shape[0], k), -1, dtype=np.int64)
-    out_scores = np.full((queries.shape[0], k), -np.inf, dtype=np.float32)
+    nq = queries.shape[0]
+    out_ids = np.full((nq, k), -1, dtype=np.int64)
+    out_scores = np.full((nq, k), -np.inf, dtype=np.float32)
     if graph.n == 0:
         return out_ids, out_scores
+    filters = None
+    if filter_tags is not None:
+        filters = np.broadcast_to(
+            np.asarray(filter_tags, dtype=np.int64), (nq,))
+        tags = graph.tags_or_zeros()
     for i, q in enumerate(np.asarray(queries, dtype=np.float32)):
         sim_e = float(M.similarity_matrix_np(
             q[None, :], graph.data[graph.entry][None, :], graph.metric)[0, 0])
@@ -587,6 +654,9 @@ def search_numpy(graph: HNSWGraph, queries: np.ndarray, k: int,
         for l in range(graph.max_level, 0, -1):
             eps = b._search_layer(q, eps, l, ef=1)[:1]
         found = b._search_layer(q, eps, 0, ef=max(ef, k))
+        if filters is not None and filters[i] != 0:
+            found = [(s, v) for s, v in found
+                     if F.alive_np(tags[v], filters[i])]
         for j, (s, v) in enumerate(found[:k]):
             out_ids[i, j] = graph.ids[v]
             out_scores[i, j] = s

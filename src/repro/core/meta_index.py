@@ -96,6 +96,32 @@ class PyramidIndex:
                 vecs_all[first]))
         return self._rerank_table
 
+    def tags_arena(self) -> jnp.ndarray:
+        """Device tag bitsets aligned with the arena stacking: ``[w,
+        n_pad, 2]`` int32 word pairs (``repro.core.filters``), pad rows
+        all-zero so they can never match a non-empty filter. Kept OUT of
+        the arena pytree — adding a leaf would churn every SPMD
+        partition spec — and memoised/invalidated alongside it."""
+        if getattr(self, "_tags_arena", None) is None:
+            from repro.core.filters import split_tag_words
+            n_pad = max(1, max((g.n for g in self.subs), default=1))
+            host = np.zeros((self.num_shards, n_pad), dtype=np.int64)
+            for i, g in enumerate(self.subs):
+                if g.n:
+                    host[i, : g.n] = g.tags_or_zeros()
+            self._tags_arena = jnp.asarray(split_tag_words(host))
+        return self._tags_arena
+
+    def tags_host(self) -> np.ndarray:
+        """All item tag bitsets concatenated over shards ([sum n] int64,
+        MIPS replication included) — the host-side view selectivity
+        estimates read (``repro.core.filters.selectivity_np``)."""
+        if getattr(self, "_tags_host", None) is None:
+            parts = [g.tags_or_zeros() for g in self.subs]
+            self._tags_host = (np.concatenate(parts) if parts
+                               else np.zeros((0,), np.int64))
+        return self._tags_host
+
     def meta_arrays(self) -> H.HNSWArrays:
         if getattr(self, "_meta_arrays", None) is None:
             self._meta_arrays = self.meta.device_arrays()
@@ -121,6 +147,8 @@ class PyramidIndex:
         self._arena = None
         self._meta_arrays = None
         self._rerank_table = None
+        self._tags_arena = None
+        self._tags_host = None
 
     def delta_log(self):
         """The append-only insert journal this index is attached to, or
@@ -141,6 +169,8 @@ class PyramidIndex:
         state.pop("_arena", None)
         state.pop("_meta_arrays", None)
         state.pop("_rerank_table", None)
+        state.pop("_tags_arena", None)
+        state.pop("_tags_host", None)
         state.pop("_delta_log", None)
         return state
 

@@ -29,8 +29,22 @@ from repro.core import metrics as M
 from repro.core.meta_index import PyramidIndex, _assign_items
 
 
+def _merge_tags(old: "H.HNSWGraph", new_tags: Optional[np.ndarray],
+                m: int) -> Optional[np.ndarray]:
+    """Tag column for a shard rebuild that appends ``m`` items: ``None``
+    when neither side carries tags (the untagged fast path stays
+    untagged), else old tags (zeros if absent) + new tags (zeros if
+    absent)."""
+    if old.tags is None and new_tags is None:
+        return None
+    new_col = (np.zeros(m, np.int64) if new_tags is None
+               else np.asarray(new_tags, np.int64))
+    return np.concatenate([old.tags_or_zeros(), new_col])
+
+
 def add_items(index: PyramidIndex, new_items: np.ndarray,
               new_ids: Optional[np.ndarray] = None, *,
+              tags: Optional[np.ndarray] = None,
               log_delta: bool = True) -> PyramidIndex:
     """Insert ``new_items`` into an existing index (in place).
 
@@ -39,6 +53,10 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
       new_items: [m, d] raw vectors (normalised internally for angular).
       new_ids: optional global ids; defaults to continuing after the
         current max id.
+      tags: optional [m] int64 metadata tag bitsets for the new items
+        (``repro.core.filters``); omitted means tag 0 (matches no
+        non-empty filter). Journaled with the insert and replayed, so
+        tags survive restart and compaction.
       log_delta: journal this insert to the index's attached store delta
         log (no-op when the index is not store-attached). The replay
         path passes ``False`` — replaying must not re-journal.
@@ -78,6 +96,8 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
             int(index.build_stats.get("max_assigned_id", -1)),
             int(new_ids.max()))
     metric = "ip" if cfg.is_mips else cfg.metric
+    if tags is not None:
+        tags = np.asarray(tags, dtype=np.int64).ravel()
 
     parts = _assign_items(x, index.meta_arrays(), index.part_of_center,
                           metric)
@@ -91,7 +111,9 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
             data, metric=metric, max_degree=cfg.max_degree,
             max_degree_upper=cfg.max_degree_upper,
             ef_construction=cfg.ef_construction,
-            seed=H.shard_seed(cfg.seed, s), ids=ids)
+            seed=H.shard_seed(cfg.seed, s), ids=ids,
+            tags=_merge_tags(old, None if tags is None else tags[sel],
+                             int(sel.sum())))
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
     index.invalidate_device_cache()   # subs changed: arena must rebuild
@@ -102,7 +124,7 @@ def add_items(index: PyramidIndex, new_items: np.ndarray,
         # back through add_items itself, preprocessing included. If
         # this append itself fails, the in-memory apply HAS happened —
         # the exception signals lost durability, not a failed insert.
-        log.append(new_items, new_ids)
+        log.append(new_items, new_ids, tags=tags)
     return index
 
 
@@ -146,7 +168,8 @@ def remove_items(index: PyramidIndex, remove_ids: np.ndarray, *,
             old.data[keep], metric=metric, max_degree=cfg.max_degree,
             max_degree_upper=cfg.max_degree_upper,
             ef_construction=cfg.ef_construction,
-            seed=H.shard_seed(cfg.seed, s), ids=old.ids[keep])
+            seed=H.shard_seed(cfg.seed, s), ids=old.ids[keep],
+            tags=None if old.tags is None else old.tags[keep])
     index.build_stats["sub_sizes"] = [g.n for g in index.subs]
     index.build_stats["total_stored"] = sum(g.n for g in index.subs)
     index.invalidate_device_cache()   # subs changed: arena must rebuild
@@ -155,4 +178,47 @@ def remove_items(index: PyramidIndex, remove_ids: np.ndarray, *,
         # re-runs remove_items on the published state in journal order,
         # so a crash can never resurrect a deleted vector
         log.append_remove(remove_ids)
+    return index
+
+
+def set_item_tags(index: PyramidIndex, ids: np.ndarray,
+                  tags: np.ndarray, *,
+                  log_delta: bool = True) -> PyramidIndex:
+    """Assign metadata tag bitsets to existing items by global id.
+
+    Tags are per-node metadata — they never influence graph structure —
+    so this mutates the sub-HNSW tag columns in place without any
+    rebuild (cost O(total items), no device upload until the next
+    search). Ids absent from the index are ignored; under MIPS
+    replication every replica of an id receives the tag.
+
+    Durable on store-attached indexes: journaled as an ``op="tags"``
+    delta record applied in journal order on replay, so a tag written
+    before a crash (or folded by the compactor) is never lost.
+    """
+    ids = np.asarray(ids, dtype=np.int64).ravel()
+    tags = np.broadcast_to(
+        np.asarray(tags, dtype=np.int64), ids.shape).ravel()
+    log = index.delta_log() if log_delta else None
+    if log is not None:
+        log.ensure_writable()   # fail BEFORE mutating (same as add_items)
+    tag_of = dict(zip(ids.tolist(), tags.tolist()))
+    for g in index.subs:
+        if not g.n:
+            continue
+        hits = [i for i, gid in enumerate(np.asarray(g.ids, np.int64))
+                if int(gid) in tag_of]
+        if not hits:
+            continue
+        col = g.tags_or_zeros()
+        for i in hits:
+            col[i] = tag_of[int(np.asarray(g.ids)[i])]
+        g.tags = col
+    # only the tag caches are stale: graphs, arenas and rerank tables
+    # are untouched, so a full invalidate (and the arena re-upload it
+    # forces) would be wasted work
+    index._tags_arena = None
+    index._tags_host = None
+    if log is not None:
+        log.append_tags(ids, tags)
     return index

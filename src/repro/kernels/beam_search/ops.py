@@ -25,13 +25,37 @@ def beam_impl() -> str:
     return "pallas-kernel" if _on_tpu() else "xla-oracle"
 
 
+def _apply_filter(scores: jnp.ndarray, nodes: jnp.ndarray,
+                  tag_words: jnp.ndarray, filter_words: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Metadata alive-mask on the walk's emitted candidates.
+
+    The navigation beam runs unfiltered (masking mid-walk would
+    disconnect the graph); here — identically after the kernel and the
+    oracle — candidates whose tag bitset misses the query's filter are
+    demoted to the (-inf, -1) padding convention, so downstream top-k
+    and merges see them exactly like structural pad slots.
+
+    tag_words: [S, n, 2] i32 word-split item bitsets; filter_words:
+    [S, C, 2] i32 per-slot filters (zero words == no filtering).
+    """
+    from repro.core.filters import alive_words
+    # [S, C, ef', 2] gather of the candidates' tag words, per graph slot
+    cand = jax.vmap(lambda tw, nd: tw[jnp.clip(nd, 0)])(tag_words, nodes)
+    alive = alive_words(cand, filter_words[:, :, None, :])
+    return (jnp.where(alive, scores, -jnp.inf),
+            jnp.where(alive, nodes, -1))
+
+
 def beam_search(data: jnp.ndarray, bottom: jnp.ndarray,
                 queries: jnp.ndarray, entries: jnp.ndarray, *,
                 metric: str, ef: int, max_iters: int,
                 scale: Optional[jnp.ndarray] = None,
                 zero: Optional[jnp.ndarray] = None,
                 use_kernel: bool = True, block_q: int = 8,
-                interpret: bool = False
+                interpret: bool = False,
+                tag_words: Optional[jnp.ndarray] = None,
+                filter_words: Optional[jnp.ndarray] = None
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Fused bottom-layer beam walk over a stack of graphs.
 
@@ -39,15 +63,23 @@ def beam_search(data: jnp.ndarray, bottom: jnp.ndarray,
     data [S, n, d] (f32, or int8 with scale/zero), bottom [S, n, M0],
     queries [S, C, d], entries [S, C] -> (scores [S, C, ef'],
     local nodes [S, C, ef']) best-first, (-inf, -1) padded.
+
+    ``tag_words`` ([S, n, 2] i32) + ``filter_words`` ([S, C, 2] i32)
+    apply the metadata alive-mask of ``repro.core.filters`` to the
+    emitted candidates — same post-walk masking for kernel and oracle,
+    so filtered results stay implementation-identical.
     """
     if not use_kernel or not _on_tpu():
-        return beam_search_ref(data, bottom, queries, entries,
-                               metric=metric, ef=ef, max_iters=max_iters,
-                               scale=scale, zero=zero)
-    out_s, out_i = beam_search_pallas(data, bottom, queries, entries,
-                                      metric=metric, ef=ef,
-                                      max_iters=max_iters, scale=scale,
-                                      zero=zero, block_q=block_q,
-                                      interpret=interpret)
-    # kernel pads with the finite NEG_INF sentinel; restore -inf
-    return jnp.where(out_i >= 0, out_s, -jnp.inf), out_i
+        out_s, out_i = beam_search_ref(
+            data, bottom, queries, entries, metric=metric, ef=ef,
+            max_iters=max_iters, scale=scale, zero=zero)
+    else:
+        out_s, out_i = beam_search_pallas(
+            data, bottom, queries, entries, metric=metric, ef=ef,
+            max_iters=max_iters, scale=scale, zero=zero, block_q=block_q,
+            interpret=interpret)
+        # kernel pads with the finite NEG_INF sentinel; restore -inf
+        out_s = jnp.where(out_i >= 0, out_s, -jnp.inf)
+    if tag_words is not None and filter_words is not None:
+        out_s, out_i = _apply_filter(out_s, out_i, tag_words, filter_words)
+    return out_s, out_i

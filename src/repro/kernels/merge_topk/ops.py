@@ -31,13 +31,18 @@ def merge_impl() -> str:
 
 
 def merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, *, k: int,
-               use_kernel: bool = True, block_q: int = 128):
+               alive=None, use_kernel: bool = True, block_q: int = 128):
     """k best entries per query with duplicate ids removed.
 
     Args:
       scores: [B, m] f32 flattened partial scores (-inf = empty slot).
       ids: [B, m] int external ids (-1 = empty slot).
       k: entries to keep; if k > m the inputs are padded up.
+      alive: optional [B, m] bool alive-mask (metadata filters,
+        tombstones): dead entries are demoted to the (-inf, -1) padding
+        convention BEFORE the merge, so filtering can never under-fill
+        the k live winners. Applied identically ahead of every
+        implementation (kernel / oracle / numpy twin).
       use_kernel: False forces the jnp oracle (required inside shard_map,
         where the interpret-mode kernel cannot run).
 
@@ -47,6 +52,9 @@ def merge_topk(scores: jnp.ndarray, ids: jnp.ndarray, *, k: int,
     """
     ids = ids.astype(jnp.int32)
     scores = scores.astype(jnp.float32)
+    if alive is not None:
+        scores = jnp.where(alive, scores, -jnp.inf)
+        ids = jnp.where(alive, ids, -1)
     m = scores.shape[1]
     if k > m:
         pad = k - m

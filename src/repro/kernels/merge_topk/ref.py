@@ -34,17 +34,22 @@ def _dominated(scores: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
     return jnp.any(eq & beats & valid_i, axis=1)
 
 
-def merge_topk_ref(scores: jnp.ndarray, ids: jnp.ndarray, *, k: int):
+def merge_topk_ref(scores: jnp.ndarray, ids: jnp.ndarray, *, k: int,
+                   alive=None):
     """Dedup top-k merge oracle.
 
     Args:
       scores: [B, m] f32, -inf for empty slots.
       ids: [B, m] int external ids, -1 for empty slots.
       k: entries to keep (k <= m; ``ops.merge_topk`` pads otherwise).
+      alive: optional [B, m] bool — dead entries become (-inf, -1)
+        before the merge (pre-merge filtering, same as ``ops``).
 
     Returns:
       (scores [B, k] f32 descending, ids [B, k] i32), (-inf, -1) padded.
     """
+    if alive is not None:
+        ids = jnp.where(alive, ids, -1)
     s = jnp.where(ids >= 0, scores.astype(jnp.float32), -jnp.inf)
     s = jnp.where(_dominated(s, ids), -jnp.inf, s)
     top_s, sel = jax.lax.top_k(s, k)
@@ -53,16 +58,23 @@ def merge_topk_ref(scores: jnp.ndarray, ids: jnp.ndarray, *, k: int):
     return top_s, top_i
 
 
-def merge_topk_np(scores: np.ndarray, ids: np.ndarray, *, k: int):
+def merge_topk_np(scores: np.ndarray, ids: np.ndarray, *, k: int,
+                  alive=None):
     """Numpy twin of :func:`merge_topk_ref` for host-side merging (the
     serving engine's coordinator thread merges tiny per-query partial
     lists; a jit round-trip per query would cost more than the merge).
+
+    ``alive`` ([B, m] bool) demotes dead entries (filters, tombstones)
+    to (-inf, -1) BEFORE the merge — the engine filters tombstones here
+    so a deleted id can never crowd a live result out of the top k.
 
     Returns (scores [B, k] f32 descending, ids [B, k] int64) — the same
     tuple order as every other ``merge_topk`` implementation.
     """
     scores = np.asarray(scores, np.float32)
     ids = np.asarray(ids, np.int64)
+    if alive is not None:
+        ids = np.where(np.asarray(alive, bool), ids, -1)
     b, m = scores.shape
     s = np.where(ids >= 0, scores, -np.inf)
     eq = ids[:, :, None] == ids[:, None, :]

@@ -53,6 +53,14 @@ def main(argv=None) -> None:
     ap.add_argument("--rerank-factor", type=int, default=4,
                     help="with --quantize: exact-rerank the top "
                          "rerank_factor * k quantized candidates")
+    ap.add_argument("--tenant", default=None, metavar="NAME",
+                    help="serve the retrieval datastore as this named "
+                         "tenant through a TenantManager (admission-"
+                         "controlled device-memory budget, LRU "
+                         "eviction; see repro.serving.tenancy)")
+    ap.add_argument("--tenant-budget-mb", type=float, default=256.0,
+                    help="with --tenant: the manager's total device-"
+                         "memory budget for tenant arenas, in MiB")
     ap.add_argument("--lam", type=float, default=0.3)
     ap.add_argument("--trace-out", default=None, metavar="PATH",
                     help="write a Chrome trace_event JSON of the run "
@@ -101,10 +109,26 @@ def main(argv=None) -> None:
                                 ef_construction=40, ef_search=60)
             with span("serve.build_datastore"):
                 ds = build_datastore(params, cfg, [corpus], pyr)
-                ds_client = stack.enter_context(open_datastore_client(
-                    ds, quantize=args.quantize,
-                    rerank_factor=args.rerank_factor,
-                    registry=registry, tracer=tracer))
+                if args.tenant:
+                    from repro.serving.tenancy import TenantManager
+                    tm = stack.enter_context(TenantManager(
+                        int(args.tenant_budget_mb * 2**20),
+                        registry=registry))
+                    tm.create(args.tenant, ds.index,
+                              quantize=args.quantize,
+                              rerank_factor=args.rerank_factor,
+                              tracer=tracer)
+                    ds_client = tm.client(args.tenant)
+                    log.info("[serve] tenant %r admitted: %s",
+                             args.tenant, tm.stats()["tenants"])
+                    if server is not None:
+                        server.add_stats_provider("tenancy", tm.stats)
+                else:
+                    ds_client = stack.enter_context(
+                        open_datastore_client(
+                            ds, quantize=args.quantize,
+                            rerank_factor=args.rerank_factor,
+                            registry=registry, tracer=tracer))
             stats = ds_client.stats()
             log.info(
                 "[serve] datastore ready: %d entries, served by %d "

@@ -86,6 +86,8 @@ class QueryRequest:
     shard: int = -1           # which topic this copy was enqueued to
     attempt: int = 0          # 0 = primary dispatch, >0 = hedge/redispatch
     span_id: Optional[int] = None   # the query's root trace span, if any
+    filter_tags: int = 0      # metadata filter bitset (0 = unfiltered)
+    fetch_k: int = 0          # selectivity-inflated per-shard fetch width
 
 
 @dataclasses.dataclass
@@ -168,11 +170,15 @@ class Executor(threading.Thread):
                  batch_max: int = 32, warm_k: int = 10,
                  fault_tick=None, redispatch=None, k_factor: int = 1,
                  linger_s: float = 0.0, net_delay_s: float = 0.0,
-                 tracer=NULL_TRACER):
+                 tag_words=None, tracer=NULL_TRACER):
         super().__init__(name=name, daemon=True)
         self.topic = topic
         self.shard_id = shard_id
         self.arena = arena
+        # this shard's device tag bitsets ([n_pad, 2] int32 word pairs,
+        # repro.core.filters) for metadata-filtered requests; None on an
+        # untagged engine keeps the unfiltered trace untouched
+        self.tag_words = tag_words
         # shared memoised view: every replica of every shard reads the
         # one engine-wide arena (equal shapes => one jit compile serves
         # all executors; one HBM copy per engine, not per executor).
@@ -262,22 +268,36 @@ class Executor(threading.Thread):
         (``repro.kernels.beam_search`` — Pallas kernel on TPU, batched
         oracle elsewhere), so every executor batch, including
         ``StreamEngine``'s per-decode-step lookups, rides it.
+
+        Filtered requests (``r.filter_tags != 0``) search at their
+        selectivity-inflated ``fetch_k`` with this shard's tag bitsets
+        masked in on device (post-walk, pre-top-k — never a host-side
+        post-filter that could under-fill); mixed batches work because
+        filter word 0 means unfiltered per query.
         """
-        k = max(r.k for r in batch) * self.k_factor
+        k = max(max(r.k, r.fetch_k) for r in batch) * self.k_factor
         k = 1 << (k - 1).bit_length()   # bucket: log-many compiles total
         vecs = np.stack([r.vector for r in batch])
         if len(batch) < self.batch_max:  # pad to the compiled shape
             pad = np.repeat(vecs[:1], self.batch_max - len(batch), axis=0)
             vecs = np.concatenate([vecs, pad], axis=0)
+        filt_kw = {}
+        filt = np.asarray([r.filter_tags for r in batch], np.int64)
+        if self.tag_words is not None and np.any(filt):
+            from repro.core import filters as F
+            fp = np.zeros(self.batch_max, np.int64)
+            fp[: len(batch)] = filt   # pad rows: word 0 = unfiltered
+            filt_kw = dict(tag_words=self.tag_words,
+                           filter_words=jnp.asarray(F.filter_words(fp)))
         with self.tracer.span("kernel.beam_walk", shard=self.shard_id,
                               k=k, batch=len(batch)):
             ids, scores = H.hnsw_search(
                 self.graph, jnp.asarray(vecs), metric=self.metric,
-                k=k, ef=max(self.ef, k))
+                k=k, ef=max(self.ef, k), **filt_kw)
         ids = np.asarray(ids)
         scores = np.asarray(scores)
-        return [(ids[i, : r.k * self.k_factor],
-                 scores[i, : r.k * self.k_factor])
+        return [(ids[i, : max(r.k, r.fetch_k) * self.k_factor],
+                 scores[i, : max(r.k, r.fetch_k) * self.k_factor])
                 for i, r in enumerate(batch)]
 
     def _throttle(self, busy_s: float) -> None:
@@ -671,6 +691,15 @@ class ServingEngine:
         # one device arena per engine; int8 when quantized (the HBM
         # vector payload shrinks ~4x — see index.arena docs)
         self.arena = index.arena("int8" if quantize else "float32")
+        # metadata-filter state, snapshotted with the arena: host tags
+        # drive submit-time selectivity estimates, the device word pairs
+        # feed the executors' on-device alive mask. Untagged indexes get
+        # None — the unfiltered jit trace is untouched, and a filtered
+        # query against an untagged engine short-circuits to empty in
+        # submit() (selectivity 0)
+        self._tags_host = index.tags_host()
+        self._tags_arena = (index.tags_arena()
+                            if self._tags_host.any() else None)
         if quantize:   # host-side full-precision copy for exact rerank
             self._rerank_table = index.rerank_table()
         # Fig. 5 routing observability: running access-rate accumulators
@@ -743,6 +772,8 @@ class ServingEngine:
                       k_factor=self.rerank_factor,
                       linger_s=self.linger_s,
                       net_delay_s=self.net_delay_s,
+                      tag_words=(None if self._tags_arena is None
+                                 else self._tags_arena[shard]),
                       tracer=self.tracer)
         # seed the heartbeat BEFORE the thread runs: an executor that
         # dies or hangs before its first beat must look stale, not
@@ -997,8 +1028,8 @@ class ServingEngine:
     # -- query path --------------------------------------------------------
 
     def submit(self, vectors: np.ndarray, k: int = 10,
-               branching_factor: Optional[int] = None
-               ) -> List[SearchFuture]:
+               branching_factor: Optional[int] = None,
+               filter_tags=None) -> List[SearchFuture]:
         """Coordinator: route + enqueue a batch; returns one
         :class:`SearchFuture` per query, in submit order.
 
@@ -1007,11 +1038,29 @@ class ServingEngine:
         their own results (there is no shared completion queue to steal
         from), and a caller that times out gets ``TimeoutError`` from
         ``future.result()`` instead of a silently short batch.
+
+        ``filter_tags`` (scalar or per-query int64 bitsets,
+        ``repro.core.filters`` semantics: 0 = unfiltered, else any-of
+        bit intersection) restricts results to matching items. The
+        per-shard fetch width is inflated by the estimated selectivity
+        (``ceil(1/sel)``, capped) so low-selectivity filters keep their
+        fill instead of being post-filtered into under-full results.
         """
         if self._shutdown:
             raise EngineShutdownError("engine is shut down")
         q = M.preprocess_queries(vectors, self.cfg.metric)
         kb = branching_factor or self.cfg.branching_factor
+        filt = np.zeros(q.shape[0], np.int64)
+        if filter_tags is not None:
+            filt = np.broadcast_to(
+                np.asarray(filter_tags, np.int64),
+                (q.shape[0],)).copy()
+        fetch = np.zeros(q.shape[0], np.int64)
+        if filt.any():
+            from repro.core import filters as F
+            for f in np.unique(filt[filt != 0]):
+                sel = F.selectivity_np(self._tags_host, int(f))
+                fetch[filt == f] = k * F.inflation(sel)
         with self.tracer.span("coordinator.route", n=int(q.shape[0]),
                               branching_factor=kb):
             mask, _ = route_queries(
@@ -1037,7 +1086,9 @@ class ServingEngine:
                 self._m_submitted.inc()
                 topics = tuple(int(s) for s in np.where(mask[i])[0])
                 fut = SearchFuture(qid)
-                if not topics:   # router selected nothing: empty result
+                if not topics or (filt[i] and self._tags_arena is None):
+                    # router selected nothing, or a non-empty filter on
+                    # an untagged engine (selectivity 0): empty result
                     fut.set_result(QueryResult(
                         qid, np.empty(0, np.int64),
                         np.empty(0, np.float32), 0.0))
@@ -1049,7 +1100,9 @@ class ServingEngine:
                 qspan = self.tracer.start("query", qid=qid, k=k,
                                           shards=list(topics))
                 req = QueryRequest(qid, q[i], k, len(topics), now,
-                                   span_id=qspan.span_id)
+                                   span_id=qspan.span_id,
+                                   filter_tags=int(filt[i]),
+                                   fetch_k=int(fetch[i]))
                 self._pending[qid] = _Pending(
                     req=req, fut=fut, expected=topics, parts={},
                     dispatched={s: now for s in topics},
@@ -1212,8 +1265,17 @@ class ServingEngine:
                 ids = np.concatenate([p.ids for p in parts])[None, :]
                 scores = np.concatenate(
                     [p.scores for p in parts])[None, :]
+                tomb = self._tombstones
+                # serving-layer delete filter: the arena still holds a
+                # removed item's row until the next maintenance hot-swap,
+                # but its id must never reach a caller. Applied as an
+                # alive mask INSIDE the merge (not on the merged top-k):
+                # a tombstoned id cannot crowd a live candidate out of
+                # the k slots, so results stay full
+                alive = (~np.isin(ids, tomb)) if tomb.size else None
                 top_scores, top_ids = merge_topk_np(
-                    scores, ids, k=entry.req.k * self.rerank_factor)
+                    scores, ids, k=entry.req.k * self.rerank_factor,
+                    alive=alive)
                 if self.quantize:
                     with self.tracer.span("rerank",
                                           qid=entry.req.query_id):
@@ -1223,12 +1285,6 @@ class ServingEngine:
                             entry.req.k, table_ids=table_ids,
                             table_vecs=table_vecs, metric=self.metric)
                 found = top_ids[0] >= 0
-                tomb = self._tombstones
-                if tomb.size:
-                    # serving-layer delete filter: the arena still holds
-                    # a removed item's row until the next maintenance
-                    # hot-swap, but its id must never reach a caller
-                    found &= ~np.isin(top_ids[0], tomb)
             latency_s = time.monotonic() - entry.req.submitted_at
             self._h_query.observe(latency_s)
             if qsid is not None:   # None = null span (tracing off)

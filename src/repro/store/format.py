@@ -43,7 +43,13 @@ def content_checksum(arrays: Dict[str, np.ndarray]) -> str:
 
 
 def graph_to_arrays(g: H.HNSWGraph) -> Dict[str, np.ndarray]:
-    """Flatten one HNSW graph into a segment's array dict."""
+    """Flatten one HNSW graph into a segment's array dict.
+
+    Tag bitsets are persisted under a ``tags`` key — but only when any
+    tag is non-zero: an untagged (or all-zero) graph serialises exactly
+    as before this key existed, so historical segment checksums and the
+    parallel-vs-sequential build determinism gate are unaffected.
+    """
     out: Dict[str, np.ndarray] = {
         "data": np.ascontiguousarray(g.data, np.float32),
         "ids": np.ascontiguousarray(g.ids, np.int64),
@@ -51,6 +57,8 @@ def graph_to_arrays(g: H.HNSWGraph) -> Dict[str, np.ndarray]:
         "entry": np.asarray(g.entry, np.int64),
         "num_levels": np.asarray(len(g.neighbors), np.int64),
     }
+    if g.tags is not None and np.any(np.asarray(g.tags)):
+        out["tags"] = np.ascontiguousarray(g.tags, np.int64)
     for lvl, adj in enumerate(g.neighbors):
         out[f"nbr_{lvl}"] = np.ascontiguousarray(adj, np.int32)
     return out
@@ -59,14 +67,16 @@ def graph_to_arrays(g: H.HNSWGraph) -> Dict[str, np.ndarray]:
 def graph_from_arrays(arrays: Dict[str, np.ndarray],
                       metric: str) -> H.HNSWGraph:
     """Inverse of :func:`graph_to_arrays` (metric rides in the
-    manifest, not the segment)."""
+    manifest, not the segment; a missing ``tags`` key means untagged)."""
     num_levels = int(arrays["num_levels"])
     neighbors: List[np.ndarray] = [
         arrays[f"nbr_{lvl}"] for lvl in range(num_levels)]
+    tags = arrays.get("tags")
     return H.HNSWGraph(
         data=arrays["data"], ids=arrays["ids"], neighbors=neighbors,
         levels=arrays["levels"], entry=int(arrays["entry"]),
-        metric=metric)
+        metric=metric,
+        tags=None if tags is None else np.asarray(tags, np.int64))
 
 
 def write_segment(path: str, arrays: Dict[str, np.ndarray], *,

@@ -174,12 +174,23 @@ class Compactor:
     # -- write path ---------------------------------------------------------
 
     def add_items(self, vectors: np.ndarray,
-                  ids: Optional[np.ndarray] = None) -> PyramidIndex:
+                  ids: Optional[np.ndarray] = None, *,
+                  tags: Optional[np.ndarray] = None) -> PyramidIndex:
         """Journaled insert into the live index (excluded only from the
         compactor's brief publish window by the write lock)."""
         from repro.core.updates import add_items
         with self._write_lock:
-            out = add_items(self.index, vectors, ids)
+            out = add_items(self.index, vectors, ids, tags=tags)
+            self._since_fold += 1
+            return out
+
+    def set_item_tags(self, ids: np.ndarray,
+                      tags: np.ndarray) -> PyramidIndex:
+        """Journaled tag assignment on the live index (folded and
+        replayed like inserts, so tags survive compaction)."""
+        from repro.core.updates import set_item_tags
+        with self._write_lock:
+            out = set_item_tags(self.index, ids, tags)
             self._since_fold += 1
             return out
 
@@ -263,13 +274,17 @@ class Compactor:
             self.fault_hook(step)
 
     def _apply(self, index: PyramidIndex, records) -> int:
-        from repro.core.updates import add_items, remove_items
+        from repro.core.updates import (add_items, remove_items,
+                                        set_item_tags)
         n = 0
-        for op, vectors, ids in records:
+        for op, vectors, ids, tags in records:
             if op == "remove":
                 remove_items(index, ids, log_delta=False)
+            elif op == "tags":
+                set_item_tags(index, ids, tags, log_delta=False)
             else:
-                add_items(index, vectors, ids, log_delta=False)
+                add_items(index, vectors, ids, tags=tags,
+                          log_delta=False)
             n += 1
         return n
 

@@ -85,10 +85,12 @@ class DeltaLog:
     """Append-only update journal of one published version.
 
     Each :func:`repro.core.updates.add_items` call appends one insert
-    record (the *raw* vectors plus their resolved global ids) and each
+    record (the *raw* vectors plus their resolved global ids), each
     ``remove_items`` call one tombstone record (ids only, LOG line
     tagged ``"op": "remove"`` — insert lines carry no ``op`` key, so an
-    insert-only log is byte-identical to the pre-tombstone format).
+    insert-only log is byte-identical to the pre-tombstone format), and
+    each ``set_item_tags`` call one tag record (ids + tag bitsets, LOG
+    line tagged ``"op": "tags"``).
     Replay applies records in journal order back through
     ``add_items``/``remove_items`` themselves, so the rebuilt shards are
     bit-identical to the pre-crash in-memory index. The jsonl ``LOG``
@@ -163,7 +165,8 @@ class DeltaLog:
             f.flush()
             os.fsync(f.fileno())
 
-    def append(self, vectors: np.ndarray, ids: np.ndarray) -> str:
+    def append(self, vectors: np.ndarray, ids: np.ndarray, *,
+               tags: Optional[np.ndarray] = None) -> str:
         """Commit one insert record.
 
         Safe against concurrent writers *on the same host*: the whole
@@ -171,10 +174,17 @@ class DeltaLog:
         claimed with ``O_EXCL``, so two attached indexes journaling into
         the same version cannot clobber each other's records or
         interleave LOG lines (cross-host writers on network filesystems
-        without flock semantics are out of scope)."""
-        return self._commit(
-            {"vectors": np.ascontiguousarray(vectors, np.float32),
-             "ids": np.ascontiguousarray(ids, np.int64)}, {})
+        without flock semantics are out of scope).
+
+        ``tags`` (optional [m] int64 bitsets) ride in the record under a
+        ``tags`` array — included only when any tag is non-zero, so
+        untagged insert records stay byte-identical to the pre-tag
+        format."""
+        arrays = {"vectors": np.ascontiguousarray(vectors, np.float32),
+                  "ids": np.ascontiguousarray(ids, np.int64)}
+        if tags is not None and np.any(np.asarray(tags)):
+            arrays["tags"] = np.ascontiguousarray(tags, np.int64)
+        return self._commit(arrays, {})
 
     def append_remove(self, ids: np.ndarray) -> str:
         """Commit one tombstone record (ids only; the LOG line carries
@@ -183,6 +193,15 @@ class DeltaLog:
         return self._commit(
             {"ids": np.ascontiguousarray(ids, np.int64)},
             {"op": "remove"})
+
+    def append_tags(self, ids: np.ndarray, tags: np.ndarray) -> str:
+        """Commit one tag-assignment record (``op: "tags"``): replay
+        routes it through ``set_item_tags`` so metadata writes survive
+        restart and compaction like inserts and removals do."""
+        return self._commit(
+            {"ids": np.ascontiguousarray(ids, np.int64),
+             "tags": np.ascontiguousarray(tags, np.int64)},
+            {"op": "tags"})
 
     def _commit(self, arrays: Dict[str, np.ndarray], extra: dict) -> str:
         self.ensure_writable()
@@ -228,10 +247,13 @@ class DeltaLog:
         return fname
 
     def replay(self, *, verify: bool = True, start: int = 0
-               ) -> Iterator[Tuple[str, Optional[np.ndarray], np.ndarray]]:
-        """Yield committed ``(op, vectors, ids)`` records in append
-        order — ``op`` is ``"insert"`` (vectors present) or ``"remove"``
-        (tombstone, vectors ``None``). ``start`` skips the first
+               ) -> Iterator[Tuple[str, Optional[np.ndarray], np.ndarray,
+                                   Optional[np.ndarray]]]:
+        """Yield committed ``(op, vectors, ids, tags)`` records in
+        append order — ``op`` is ``"insert"`` (vectors present),
+        ``"remove"`` (tombstone, vectors ``None``) or ``"tags"`` (tag
+        assignment: ids + tags, vectors ``None``); ``tags`` is ``None``
+        for untagged inserts and removals. ``start`` skips the first
         ``start`` records (the compactor's catch-up reads only the tail
         appended after its fold snapshot)."""
         for entry in self._entries()[start:]:
@@ -239,7 +261,8 @@ class DeltaLog:
                 os.path.join(self.dir, entry["file"]),
                 entry["checksum"] if verify else "")
             op = entry.get("op", "insert")
-            yield op, arrays.get("vectors"), arrays["ids"]
+            yield (op, arrays.get("vectors"), arrays["ids"],
+                   arrays.get("tags"))
 
     def truncate(self) -> int:
         """Drop every committed record (the compactor calls this once
@@ -562,12 +585,16 @@ class IndexStore:
                 QuantParams.from_manifest(reader.manifest["quant"]))
         delta = reader.delta_log()
         if replay_delta:
-            from repro.core.updates import add_items, remove_items
-            for op, vectors, ids in delta.replay(verify=verify):
+            from repro.core.updates import (add_items, remove_items,
+                                            set_item_tags)
+            for op, vectors, ids, tags in delta.replay(verify=verify):
                 if op == "remove":
                     remove_items(index, ids, log_delta=False)
+                elif op == "tags":
+                    set_item_tags(index, ids, tags, log_delta=False)
                 else:
-                    add_items(index, vectors, ids, log_delta=False)
+                    add_items(index, vectors, ids, tags=tags,
+                              log_delta=False)
         if attach_delta:
             index.attach_delta_log(delta)
         return index

@@ -1,8 +1,6 @@
 """The paper's public API surface (Sec. IV-A Listings 1-3)."""
 import threading
-import time
 
-import numpy as np
 import pytest
 
 from repro.core import metrics as M

@@ -7,7 +7,6 @@ import pytest
 from repro.common.registry import get_arch
 from repro.models.transformer import forward, init_params, make_cache
 from repro.serving.batcher import ContinuousBatcher, Request
-from repro.serving.sampler import SamplerConfig
 
 
 @pytest.fixture(scope="module")

@@ -2,7 +2,6 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.data.vectors import (load_dataset, read_fvecs, worker_slice,
                                 write_fvecs)

@@ -1,5 +1,4 @@
 """Shape/dtype sweep of the topk_distance Pallas kernel vs the jnp oracle."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

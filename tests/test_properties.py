@@ -1,5 +1,4 @@
 """Hypothesis property tests on system invariants."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -12,12 +12,11 @@ from repro.common.registry import get_arch
 from repro.core import metrics as M
 from repro.core.meta_index import build_pyramid_index
 from repro.data.synthetic import clustered_vectors, query_set
-from repro.models.transformer import (forward, grow_cache, init_params,
-                                      make_cache)
+from repro.models.transformer import forward, grow_cache, init_params
 from repro.serving.decode import decode_step, prefill_step
 from repro.serving.engine import ServingEngine
-from repro.serving.retrieval import (Datastore, build_datastore,
-                                     hidden_states, interpolate, knn_probs)
+from repro.serving.retrieval import (build_datastore, hidden_states,
+                                     interpolate, knn_probs)
 
 
 # ---------------------------------------------------------------------------

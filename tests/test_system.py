@@ -1,6 +1,4 @@
 """End-to-end behaviour tests for the full Pyramid system."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -1,0 +1,198 @@
+"""Multi-tenant namespaces: admission control at the HBM budget,
+LRU eviction + transparent re-pin, cross-tenant isolation, replica
+arbitration, and (faults lane) exactly-once delivery per tenant while
+both tenants ride a fault storm."""
+import numpy as np
+import pytest
+
+from repro.common.config import PyramidConfig
+from repro.core import metrics as M
+from repro.core.client import gather, gather_arrays
+from repro.core.meta_index import build_pyramid_index
+from repro.core.updates import remove_items
+from repro.data.synthetic import clustered_vectors, query_set
+from repro.serving.tenancy import (AdmissionError, TenantManager,
+                                   estimate_arena_bytes)
+
+
+def _make(n=500, d=8, seed=0, shards=2):
+    x = clustered_vectors(n, d, 8, seed=seed)
+    cfg = PyramidConfig(metric="l2", num_shards=shards, meta_size=16,
+                        sample_size=min(n, 300), branching_factor=2,
+                        max_degree=10, max_degree_upper=5,
+                        ef_construction=40, ef_search=50,
+                        kmeans_iters=5, seed=seed)
+    return x, build_pyramid_index(x, cfg)
+
+
+def _ids(client, queries, k=10):
+    ids, _ = gather_arrays(client.search_batch(queries, k=k), k, 60.0)
+    return ids
+
+
+# ---------------------------------------------------------------------------
+# admission control
+# ---------------------------------------------------------------------------
+
+
+def test_admission_at_exact_budget():
+    x, idx = _make()
+    est = estimate_arena_bytes(idx)
+    assert est > 0
+    # an arena exactly at the budget is admitted ...
+    with TenantManager(est) as tm:
+        tm.create("a", idx)
+        assert tm.stats()["tenants"]["a"]["live"]
+        assert tm.used_bytes == est   # estimate == engine's true-up
+    # ... one byte less is refused up front, before any device work
+    with TenantManager(est - 1) as tm:
+        with pytest.raises(AdmissionError, match="over the total"):
+            tm.create("a", idx)
+        assert tm.tenants() == []     # failed create leaves no tenant
+
+
+def test_budget_must_be_positive():
+    with pytest.raises(ValueError, match="budget_bytes"):
+        TenantManager(0)
+
+
+def test_admission_error_when_nothing_evictable():
+    xa, ia = _make(seed=0)
+    xb, ib = _make(seed=1)
+    big_x, big = _make(n=1600, seed=2)
+    est = estimate_arena_bytes(ia)
+    with TenantManager(2 * est) as tm:
+        tm.create("a", ia)
+        tm.create("b", ib)
+        # big needs more than the whole budget: rejected at create
+        with pytest.raises(AdmissionError):
+            tm.create("big", big)
+
+
+# ---------------------------------------------------------------------------
+# LRU eviction / re-pin
+# ---------------------------------------------------------------------------
+
+
+def test_evict_repin_roundtrip_identical():
+    xa, ia = _make(seed=0)
+    xb, ib = _make(seed=1)
+    qa, qb = query_set(xa, 8, seed=2), query_set(xb, 8, seed=3)
+    budget = int(max(estimate_arena_bytes(ia),
+                     estimate_arena_bytes(ib)) * 1.25)
+    with TenantManager(budget) as tm:      # fits ONE tenant at a time
+        tm.create("a", ia)
+        ca = tm.client("a")
+        ids0 = _ids(ca, qa)
+        tm.create("b", ib)                 # admitting b evicts cold a
+        st = tm.stats()["tenants"]
+        assert st["b"]["live"] and not st["a"]["live"]
+        assert tm.stats()["used_bytes"] <= budget
+        _ids(tm.client("b"), qb)
+        # the SAME client session transparently re-pins a (evicting b)
+        ids1 = _ids(ca, qa)
+        st = tm.stats()["tenants"]
+        assert st["a"]["live"] and not st["b"]["live"]
+        np.testing.assert_array_equal(ids0, ids1)
+        assert st["a"]["evictions"] == 1
+
+
+def test_explicit_evict_and_lazy_repin():
+    x, idx = _make()
+    q = query_set(x, 4, seed=1)
+    with TenantManager(4 * estimate_arena_bytes(idx)) as tm:
+        tm.create("a", idx)
+        ids0 = _ids(tm.client("a"), q)
+        assert tm.evict("a") is True
+        assert not tm.stats()["tenants"]["a"]["live"]
+        assert tm.evict("a") is False     # already cold
+        ids1 = _ids(tm.client("a"), q)    # lazy re-pin
+        np.testing.assert_array_equal(ids0, ids1)
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant isolation
+# ---------------------------------------------------------------------------
+
+
+def test_remove_items_in_one_tenant_never_affects_other():
+    xa, ia = _make(seed=0)
+    xb, ib = _make(seed=1)
+    qa, qb = query_set(xa, 8, seed=4), query_set(xb, 8, seed=5)
+    with TenantManager(
+            4 * (estimate_arena_bytes(ia)
+                 + estimate_arena_bytes(ib))) as tm:
+        tm.create("a", ia)
+        tm.create("b", ib)
+        ids_b0 = _ids(tm.client("b"), qb)
+        victims = np.unique(_ids(tm.client("a"), qa)[:, 0])
+        remove_items(ia, victims)
+        # re-pin a so its engine rebuilds from the mutated host index
+        tm.evict("a")
+        ids_a = _ids(tm.client("a"), qa)
+        assert not np.isin(victims, ids_a).any()
+        # b is untouched: same engine, bit-identical results
+        np.testing.assert_array_equal(_ids(tm.client("b"), qb), ids_b0)
+        assert tm.stats()["tenants"]["b"]["evictions"] == 0
+
+
+def test_arbitrate_splits_replica_budget_by_access_rate():
+    xa, ia = _make(seed=0)
+    xb, ib = _make(seed=1)
+    qa = query_set(xa, 4, seed=6)
+    with TenantManager(
+            4 * (estimate_arena_bytes(ia)
+                 + estimate_arena_bytes(ib))) as tm:
+        tm.create("a", ia)
+        tm.create("b", ib)
+        tm.attach_autoscaler("a")
+        tm.attach_autoscaler("b")
+        for _ in range(8):                  # make a the hot tenant
+            gather(tm.submit("a", qa, k=5), 60.0)
+        alloc = tm.arbitrate(8)
+        assert sum(alloc.values()) == 8
+        assert alloc["a"] > alloc["b"] >= 1
+        st = tm.stats("a")
+        assert st["tenancy"]["live"]
+
+
+# ---------------------------------------------------------------------------
+# faults lane: both tenants ride a storm, exactly-once per tenant
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.faults
+def test_two_tenant_storm_exactly_once_per_tenant():
+    from repro.serving.faults import FaultSchedule
+    xa, ia = _make(n=900, d=10, seed=0, shards=3)
+    xb, ib = _make(n=700, d=10, seed=1, shards=3)
+    qa, qb = query_set(xa, 24, seed=7), query_set(xb, 24, seed=8)
+    with TenantManager(
+            4 * (estimate_arena_bytes(ia)
+                 + estimate_arena_bytes(ib))) as tm:
+        # each tenant gets its OWN storm (schedules are single-use);
+        # hedging + supervised restarts keep both lossless
+        tm.create("a", ia, replicas=2, hedge=True,
+                  hedge_deadline_s=0.25, executor_batch=4,
+                  fault_schedule=FaultSchedule.storm(
+                      13, num_shards=3, replicas=2))
+        tm.create("b", ib, replicas=2, hedge=True,
+                  hedge_deadline_s=0.25, executor_batch=4,
+                  fault_schedule=FaultSchedule.storm(
+                      14, num_shards=3, replicas=2))
+        futs = {"a": tm.client("a").search_batch(qa, k=10),
+                "b": tm.client("b").search_batch(qb, k=10)}
+        for t, (x, q) in (("a", (xa, qa)), ("b", (xb, qb))):
+            results = [f.result(timeout=120) for f in futs[t]]
+            qids = [r.query_id for r in results]
+            # exactly-once, in submit order, no foreign results
+            assert qids == [f.query_id for f in futs[t]]
+            assert len(set(qids)) == len(qids)
+            for r in results:
+                assert len(set(r.ids.tolist())) == len(r.ids)
+            true_ids, _ = M.brute_force_topk(q, x, 10, "l2")
+            hits = sum(
+                len(set(r.ids.tolist()) & set(true_ids[i].tolist()))
+                for i, r in enumerate(results))
+            assert hits / true_ids.size >= 0.8, \
+                f"tenant {t} lost recall under the storm"

@@ -1,5 +1,4 @@
 """Training substrate: optimizer math, loss decreases, checkpoint roundtrip."""
-import os
 
 import jax
 import jax.numpy as jnp
@@ -10,7 +9,7 @@ from repro.common.registry import get_arch
 from repro.data.synthetic import SyntheticLM
 from repro.models.transformer import init_params
 from repro.train.checkpoint import load_checkpoint, save_checkpoint
-from repro.train.optimizer import (AdamWConfig, adamw_update, global_norm,
+from repro.train.optimizer import (AdamWConfig, adamw_update,
                                    init_opt_state, schedule)
 from repro.train.train_step import make_train_step, init_sharded
 
